@@ -1,0 +1,224 @@
+"""Benchmarks — one per paper table/figure, CPU-scale analogues.
+
+  fig1   per-mode time variation of a mode-specific format vs BLCO
+  fig8   all-mode MTTKRP speedup: BLCO vs COO / F-COO / CSF (geomean)
+  fig9   per-mode speedup vs the strongest baseline
+  table3 memory volume (device bytes) per format + achieved throughput
+  fig10  out-of-memory streaming: overall vs in-memory throughput
+  fig11  format construction cost: BLCO vs baselines (+ ALTO stages)
+  fig12  BLCO construction-stage breakdown
+  embed  the technique in the LM path: segment vs scatter embed-grad step
+
+Output: ``name,us_per_call,derived`` CSV rows (plus commentary lines
+prefixed with '#'). The paper's absolute GPU numbers are not reproducible
+on 1 CPU core; the *relative* claims (BLCO >= baselines on all-mode MTTKRP,
+mode-balance, OOM parity) are what these measure — see EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import statistics
+import time
+
+import numpy as np
+
+from repro import core
+
+RANK = 32
+SUITE = ["uber-like", "chicago-like", "vast-like", "darpa-like",
+         "nell2-like"]
+
+
+def _time(fn, *, warmup=2, iters=5) -> float:
+    for _ in range(warmup):
+        r = fn()
+    if hasattr(r, "block_until_ready"):
+        r.block_until_ready()
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        r = fn()
+        if hasattr(r, "block_until_ready"):
+            r.block_until_ready()
+        ts.append(time.perf_counter() - t0)
+    return statistics.median(ts)
+
+
+def _factors(t, seed=0):
+    rng = np.random.default_rng(seed)
+    import jax.numpy as jnp
+    return [jnp.asarray(rng.standard_normal((d, RANK)).astype(np.float32))
+            for d in t.dims]
+
+
+def _formats(t):
+    """Device-resident formats (paper's in-memory regime: the tensor stays
+    in device memory across CP-ALS iterations; only factors change)."""
+    from repro.core.baselines import DeviceCOO, DeviceCSF, DeviceFCOO
+    from repro.core.mttkrp import DeviceBLCO
+    return {
+        "blco": DeviceBLCO(core.build_blco(t)),
+        "coo": DeviceCOO(core.COOFormat.build(t)),
+        "fcoo": DeviceFCOO(core.FCOOFormat.build(t)),
+        "csf": DeviceCSF(core.CSFFormat.build(t)),
+    }
+
+
+def _mttkrp_time(fmt_name, fmt, factors, mode, resolution="auto") -> float:
+    if fmt_name == "blco":
+        return _time(lambda: fmt.mttkrp(factors, mode, resolution=resolution))
+    return _time(lambda: fmt.mttkrp(factors, mode))
+
+
+def bench_fig8_fig9_fig1(rows):
+    geo: dict[str, list] = {"coo": [], "fcoo": [], "csf": []}
+    geo_faithful: dict[str, list] = {"coo": [], "fcoo": [], "csf": []}
+    for name in SUITE:
+        t = core.paper_like(name, seed=0)
+        fmts = _formats(t)
+        factors = _factors(t)
+        per_mode: dict[str, list] = {k: [] for k in fmts}
+        faithful: list[float] = []
+        for mode in range(t.order):
+            for k in fmts:
+                res = "direct" if k == "blco" else "auto"
+                per_mode[k].append(_mttkrp_time(k, fmts[k], factors, mode,
+                                                resolution=res))
+            # paper-faithful conflict-resolution path (segment machinery);
+            # on CPU the direct scatter wins — the segment win is TPU/GPU-
+            # specific (serialized conflicting updates), see EXPERIMENTS.md
+            faithful.append(_mttkrp_time("blco", fmts["blco"], factors, mode,
+                                         resolution="auto"))
+        all_mode = {k: sum(v) for k, v in per_mode.items()}
+        t_faithful = sum(faithful)
+        for k in ("coo", "fcoo", "csf"):
+            sp = all_mode[k] / all_mode["blco"]
+            geo[k].append(sp)
+            geo_faithful[k].append(all_mode[k] / t_faithful)
+            rows.append((f"fig8.{name}.speedup_vs_{k}",
+                         all_mode["blco"] * 1e6, f"{sp:.3f}x"))
+        rows.append((f"fig8.{name}.faithful_segment_path",
+                     t_faithful * 1e6,
+                     f"{all_mode['blco']/t_faithful:.3f}x of direct"))
+        # fig9: per-mode speedup vs best baseline
+        for mode in range(t.order):
+            best = min(per_mode[k][mode] for k in ("coo", "fcoo", "csf"))
+            rows.append((f"fig9.{name}.mode{mode+1}",
+                         per_mode["blco"][mode] * 1e6,
+                         f"{best / per_mode['blco'][mode]:.3f}x"))
+        # fig1: per-mode imbalance (max/min across modes), CSF vs BLCO
+        for k in ("csf", "blco"):
+            imb = max(per_mode[k]) / min(per_mode[k])
+            rows.append((f"fig1.{name}.mode_imbalance_{k}", 0.0,
+                         f"{imb:.2f}x"))
+    for k, v in geo.items():
+        g = float(np.exp(np.mean(np.log(v))))
+        rows.append((f"fig8.geomean_speedup_vs_{k}", 0.0, f"{g:.3f}x"))
+    for k, v in geo_faithful.items():
+        g = float(np.exp(np.mean(np.log(v))))
+        rows.append((f"fig8.geomean_faithful_vs_{k}", 0.0, f"{g:.3f}x"))
+
+
+def bench_table3(rows):
+    for name in SUITE[:3]:
+        t = core.paper_like(name, seed=0)
+        fmts = _formats(t)
+        factors = _factors(t)
+        vol = {k: f.device_bytes() for k, f in fmts.items()}
+        for k, b in vol.items():
+            tm = sum(_mttkrp_time(k, fmts[k], factors, m)
+                     for m in range(t.order))
+            tp = b * t.order / tm / 1e9
+            rows.append((f"table3.{name}.{k}", tm * 1e6,
+                         f"vol={b/1e6:.2f}MB tp={tp:.2f}GB/s"))
+
+
+def bench_fig10(rows):
+    from repro.core.mttkrp import DeviceBLCO
+    t = core.paper_like("amazon-like", seed=0)
+    b = core.build_blco(t, max_nnz_per_block=1 << 14)
+    factors = _factors(t)
+    dev = DeviceBLCO(b)
+    in_mem = _time(lambda: dev.mttkrp(factors, 0))
+    ex = core.OOMExecutor(b, queues=4)
+    ex.stats.__init__()
+    t0 = time.perf_counter()
+    ex.mttkrp(factors, 0)
+    overall = time.perf_counter() - t0
+    nnz_bytes = b.idx_hi.nbytes + b.idx_lo.nbytes + b.values.nbytes
+    rows.append(("fig10.amazon-like.in_memory", in_mem * 1e6,
+                 f"{nnz_bytes/in_mem/1e9:.2f}GB/s"))
+    rows.append(("fig10.amazon-like.oom_overall", overall * 1e6,
+                 f"{nnz_bytes/overall/1e9:.2f}GB/s "
+                 f"({in_mem/overall*100:.0f}% of in-mem)"))
+    rows.append(("fig10.amazon-like.h2d_bytes", 0.0,
+                 f"{ex.stats.h2d_bytes/1e6:.1f}MB"))
+
+
+def bench_fig11_fig12(rows):
+    for name in SUITE[:3]:
+        t = core.paper_like(name, seed=0)
+        tb = _time(lambda: core.build_blco(t), warmup=1, iters=3)
+        tc = _time(lambda: core.COOFormat.build(t), warmup=1, iters=3)
+        tf = _time(lambda: core.FCOOFormat.build(t), warmup=1, iters=3)
+        ts = _time(lambda: core.CSFFormat.build(t), warmup=1, iters=3)
+        rows.append((f"fig11.{name}.blco", tb * 1e6, "1.00x"))
+        for k, v in (("coo", tc), ("fcoo", tf), ("csf", ts)):
+            rows.append((f"fig11.{name}.{k}", v * 1e6, f"{v/tb:.2f}x vs blco"))
+        b = core.build_blco(t)
+        total = sum(b.construction_stats.values())
+        for stage, sec in b.construction_stats.items():
+            rows.append((f"fig12.{name}.{stage}", sec * 1e6,
+                         f"{sec/total*100:.1f}%"))
+        # paper claim: blocking+re-encoding < 25% of construction
+        extra = (b.construction_stats["reencode"]
+                 + b.construction_stats["blocking"]
+                 + b.construction_stats["block_keys"]
+                 + b.construction_stats["batching"])
+        rows.append((f"fig12.{name}.blco_extra_over_alto", extra * 1e6,
+                     f"{extra/total*100:.1f}% (<25% claim)"))
+
+
+def bench_embed_grad(rows):
+    import dataclasses
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.launch import steps
+    from repro.optim import adamw
+    from repro.models import build_model
+    rng = np.random.default_rng(0)
+    for method in ("segment", "scatter"):
+        cfg = dataclasses.replace(get_config("minicpm_2b").reduced(),
+                                  embed_grad=method)
+        model = build_model(cfg)
+        opt_cfg = adamw.AdamWConfig(total_steps=100)
+        step = jax.jit(steps.make_train_step(cfg, opt_cfg))
+        params = model.init(jax.random.key(0))
+        state = {"params": params, "opt": adamw.init_state(params, opt_cfg)}
+        batch = {"tokens": jnp.asarray(
+                     (rng.zipf(1.2, (8, 256)) % cfg.vocab_size).astype(np.int32)),
+                 "labels": jnp.asarray(
+                     rng.integers(0, cfg.vocab_size, (8, 256)))}
+
+        def run():
+            nonlocal state
+            state, m = step(state, batch)
+            return m["loss"]
+        rows.append((f"embed.train_step.{method}", _time(run) * 1e6, ""))
+
+
+def main() -> None:
+    rows: list[tuple[str, float, str]] = []
+    print("# BLCO paper benchmarks (CPU-scale analogues; see EXPERIMENTS.md)")
+    bench_fig8_fig9_fig1(rows)
+    bench_table3(rows)
+    bench_fig10(rows)
+    bench_fig11_fig12(rows)
+    bench_embed_grad(rows)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

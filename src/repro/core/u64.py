@@ -1,0 +1,83 @@
+"""64-bit unsigned integer arithmetic as pairs of 32-bit words.
+
+TPU's VPU is a 32-bit vector machine: 64-bit integer vector ops are emulated and
+Pallas-TPU does not lower them well. The paper stores BLCO linear indices as native
+64-bit integers on GPUs; the TPU-native adaptation (DESIGN.md §2) keeps every
+linear index as an (hi, lo) pair of uint32 arrays and performs the shift+mask
+de-linearization with 32-bit ops only.
+
+All functions are pure jnp (usable inside Pallas kernel bodies and under jit),
+operating element-wise on equal-shaped (hi, lo) uint32 arrays. Host-side
+construction uses numpy uint64 / Python ints and `split64`/`join64`.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+U32_MASK = np.uint64(0xFFFFFFFF)
+
+
+# ---------------------------------------------------------------- host helpers
+def split64(x: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """uint64 array -> (hi, lo) uint32 arrays."""
+    x = np.asarray(x, dtype=np.uint64)
+    lo = (x & U32_MASK).astype(np.uint32)
+    hi = (x >> np.uint64(32)).astype(np.uint32)
+    return hi, lo
+
+
+def join64(hi: np.ndarray, lo: np.ndarray) -> np.ndarray:
+    """(hi, lo) uint32 arrays -> uint64 array (host side only)."""
+    return (np.asarray(hi, np.uint64) << np.uint64(32)) | np.asarray(lo, np.uint64)
+
+
+# --------------------------------------------------------------- device helpers
+def _u32(x):
+    return jnp.asarray(x, jnp.uint32)
+
+
+def extract_field(hi, lo, shift: int, width: int):
+    """Extract bits [shift, shift+width) of the 64-bit value (hi<<32)|lo.
+
+    shift/width are Python ints (static under jit). Returns uint32 (width <= 32
+    is required — BLCO mode fields never exceed 32 bits because no single mode
+    length exceeds 2^32 in any supported tensor).
+    """
+    assert 0 <= width <= 32, "mode field wider than 32 bits is unsupported"
+    if width == 0:
+        return jnp.zeros_like(_u32(lo))
+    mask = jnp.uint32((1 << width) - 1) if width < 32 else jnp.uint32(0xFFFFFFFF)
+    if shift >= 32:
+        # field entirely in hi
+        return (_u32(hi) >> jnp.uint32(shift - 32)) & mask
+    if shift + width <= 32:
+        # field entirely in lo
+        return (_u32(lo) >> jnp.uint32(shift)) & mask
+    # field straddles the 32-bit boundary: stitch
+    lo_bits = 32 - shift
+    lo_part = _u32(lo) >> jnp.uint32(shift)                     # lo_bits wide
+    hi_part = _u32(hi) & jnp.uint32((1 << (shift + width - 32)) - 1)
+    return (lo_part | (hi_part << jnp.uint32(lo_bits))) & mask
+
+
+def neq64(hi_a, lo_a, hi_b, lo_b):
+    """Element-wise (a != b) for 64-bit pairs."""
+    return jnp.logical_or(_u32(hi_a) != _u32(hi_b), _u32(lo_a) != _u32(lo_b))
+
+
+def shift_right(hi, lo, n: int):
+    """Logical right shift of the 64-bit pair by a static n in [0, 64]."""
+    assert 0 <= n <= 64
+    hi = _u32(hi)
+    lo = _u32(lo)
+    if n == 0:
+        return hi, lo
+    if n >= 64:
+        z = jnp.zeros_like(hi)
+        return z, z
+    if n >= 32:
+        return jnp.zeros_like(hi), hi >> jnp.uint32(n - 32) if n > 32 else hi
+    new_lo = (lo >> jnp.uint32(n)) | (hi << jnp.uint32(32 - n))
+    new_hi = hi >> jnp.uint32(n)
+    return new_hi, new_lo

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the BLCO MTTKRP hot path (validated in interpret
+mode on CPU; TARGET is TPU v5e)."""
+from .ops import pallas_mttkrp
+from .delinearize import delinearize
+from .blco_mttkrp import mttkrp_segments, mttkrp_stash
+
+__all__ = ["pallas_mttkrp", "delinearize", "mttkrp_segments", "mttkrp_stash"]

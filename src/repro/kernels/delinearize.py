@@ -1,0 +1,71 @@
+"""Pallas kernel: BLCO de-linearization (the paper's processing phase, §5.1.1).
+
+Each grid step loads a VMEM tile of stored (hi, lo) uint32 index words and the
+per-element block bases, and recovers every mode's coordinate with the
+shift+mask extraction the BLCO re-encoding was designed for — 32-bit ops only
+(TPU VPU is a 32-bit machine; DESIGN.md §2). Each coordinate is computed
+independently, exposing ILP exactly as the paper notes.
+
+Fields that straddle the 32-bit word boundary are stitched from both words —
+the price of the 2x-uint32 adaptation, two extra bitwise ops for at most one
+mode per tensor.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(hi_ref, lo_ref, bases_ref, out_ref, *, field_bits, field_shifts):
+    hi = hi_ref[...]
+    lo = lo_ref[...]
+    cols = []
+    for n, (shift, width) in enumerate(zip(field_shifts, field_bits)):
+        if width == 0:
+            field = jnp.zeros_like(lo)
+        elif shift >= 32:                      # entirely in hi word
+            mask = jnp.uint32((1 << width) - 1) if width < 32 else jnp.uint32(0xFFFFFFFF)
+            field = (hi >> jnp.uint32(shift - 32)) & mask
+        elif shift + width <= 32:              # entirely in lo word
+            mask = jnp.uint32((1 << width) - 1) if width < 32 else jnp.uint32(0xFFFFFFFF)
+            field = (lo >> jnp.uint32(shift)) & mask
+        else:                                  # straddles: stitch both words
+            lo_bits = 32 - shift
+            lo_part = lo >> jnp.uint32(shift)
+            hi_part = hi & jnp.uint32((1 << (shift + width - 32)) - 1)
+            field = lo_part | (hi_part << jnp.uint32(lo_bits))
+            field = field & jnp.uint32((1 << width) - 1)
+        cols.append(field.astype(jnp.int32) + bases_ref[:, n])
+    out_ref[...] = jnp.stack(cols, axis=1)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("field_bits", "field_shifts", "tile",
+                                    "interpret"))
+def delinearize(idx_hi, idx_lo, bases, *, field_bits: tuple,
+                field_shifts: tuple, tile: int = 1024, interpret: bool = True):
+    """(T,) uint32 words + (T, N) int32 bases -> (T, N) int32 coordinates.
+
+    T must be a multiple of ``tile`` (callers pad launches to power-of-two
+    sizes already). interpret=True validates on CPU; on TPU pass False.
+    """
+    t = idx_hi.shape[0]
+    n_modes = len(field_bits)
+    assert t % tile == 0, (t, tile)
+    grid = (t // tile,)
+    return pl.pallas_call(
+        functools.partial(_kernel, field_bits=field_bits,
+                          field_shifts=field_shifts),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile, n_modes), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, n_modes), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, n_modes), jnp.int32),
+        interpret=interpret,
+    )(idx_hi, idx_lo, bases)

@@ -1,0 +1,85 @@
+"""Jit'd public wrappers around the Pallas BLCO-MTTKRP kernels.
+
+``pallas_mttkrp`` is a drop-in replacement for ``repro.core.mttkrp.mttkrp``:
+same BLCOTensor in, same (I_mode, R) out, validated against the same dense
+oracle. The pipeline per launch is the paper's two phases:
+
+  1. processing: ``delinearize`` kernel (shift+mask on uint32 word pairs);
+  2. gather:     non-target factor rows via XLA's native gather (on TPU this
+                 is the hardware-optimized path; the GPU paper's coalesced
+                 loads have no direct Pallas analogue — DESIGN.md §2);
+  3. computing:  fused hadamard + on-the-fly segmented reduction kernel —
+                 ``stash`` variant when the target mode is short (the §5.3
+                 heuristic), ``segment`` variant + one-update-per-segment
+                 scatter otherwise.
+
+``interpret`` defaults to True (CPU validation container); pass False on TPU.
+"""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.blco import BLCOTensor
+from repro.core.mttkrp import choose_resolution, CONTENTION_THRESHOLD
+
+from .delinearize import delinearize
+from .blco_mttkrp import mttkrp_segments, mttkrp_stash
+from .ref import scatter_segments_ref
+
+
+def _pad_pow2(n: int, floor: int) -> int:
+    return max(floor, 1 << math.ceil(math.log2(max(1, n))))
+
+
+def pallas_mttkrp(blco: BLCOTensor, factors, mode: int, *,
+                  tile: int = 256, interpret: bool = True,
+                  resolution: str = "auto"):
+    """Full mode-n MTTKRP over all launches, Pallas path."""
+    assert 0 <= mode < blco.order
+    factors = tuple(jnp.asarray(f) for f in factors)
+    rank = factors[0].shape[1]
+    out = jnp.zeros((blco.dims[mode], rank), factors[0].dtype)
+    if resolution == "auto":
+        resolution = choose_resolution(blco.dims[mode])
+    use_stash = (resolution == "hierarchical"
+                 and blco.dims[mode] <= 4 * CONTENTION_THRESHOLD)
+
+    bases_all = blco.block_upper_bases()
+    block_ids = blco.element_block_ids()
+    re = blco.re
+    for launch in blco.launches:
+        s, e = launch.start, launch.end
+        n = e - s
+        padded = _pad_pow2(n, tile)
+        hi = np.zeros(padded, np.uint32); hi[:n] = blco.idx_hi[s:e]
+        lo = np.zeros(padded, np.uint32); lo[:n] = blco.idx_lo[s:e]
+        vals = np.zeros(padded, np.float32); vals[:n] = blco.values[s:e]
+        bases = np.zeros((padded, blco.order), np.int32)
+        bases[:n] = bases_all[block_ids[s:e]]
+
+        # phase 1: processing (Pallas delinearize kernel)
+        coords = delinearize(jnp.asarray(hi), jnp.asarray(lo),
+                             jnp.asarray(bases),
+                             field_bits=re.field_bits,
+                             field_shifts=re.field_shift,
+                             tile=min(1024, padded), interpret=interpret)
+        # phase 2: gather non-target rows (XLA native gather)
+        gathered = tuple(jnp.take(factors[m], coords[:, m], axis=0)
+                         for m in range(blco.order) if m != mode)
+        tgt = coords[:, mode]
+        v = jnp.asarray(vals)
+
+        # phase 3: computing (fused Pallas kernel)
+        if use_stash:
+            out = out + mttkrp_stash(v, tgt, gathered,
+                                     out_rows=blco.dims[mode],
+                                     tile=tile, interpret=interpret)
+        else:
+            seg_tgt, seg_sums = mttkrp_segments(v, tgt, gathered,
+                                                tile=tile, interpret=interpret)
+            out = out + scatter_segments_ref(seg_tgt, seg_sums,
+                                             blco.dims[mode])
+    return out

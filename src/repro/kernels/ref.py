@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for the Pallas kernels (shape-for-shape identical outputs).
+
+Every kernel in this package is validated against these references across
+shape/dtype sweeps in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import u64
+
+
+def delinearize_ref(idx_hi, idx_lo, bases, *, field_bits, field_shifts):
+    """(T,) hi/lo uint32 + (T, N) int32 bases -> (T, N) int32 coordinates."""
+    cols = []
+    for n, (shift, width) in enumerate(zip(field_shifts, field_bits)):
+        f = u64.extract_field(idx_hi, idx_lo, shift, width).astype(jnp.int32)
+        cols.append(f + bases[:, n])
+    return jnp.stack(cols, axis=1)
+
+
+def _tile_segments(tgt, tile: int):
+    """Per-tile on-the-fly segment ids: a new segment starts at every tile
+    boundary and wherever the target index changes (paper §5.1 step 3)."""
+    t = tgt.shape[0]
+    pos = jnp.arange(t, dtype=jnp.int32)
+    prev = jnp.roll(tgt, 1)
+    flags = jnp.where((pos % tile == 0) | (tgt != prev), 1, 0).astype(jnp.int32)
+    # segment ids restart per tile so they match the per-tile kernel outputs
+    seg_global = jnp.cumsum(flags) - 1
+    tile_id = pos // tile
+    tile_first_seg = seg_global.reshape(-1, tile)[:, 0]
+    return seg_global - tile_first_seg[tile_id], tile_id
+
+
+def mttkrp_segments_ref(vals, tgt, gathered, *, tile: int):
+    """Oracle for the fused compute kernel (segment-output variant).
+
+    vals: (T,) values; tgt: (T,) int32 target-mode coords (ALTO order);
+    gathered: tuple of (T, R) non-target factor rows.
+    Returns (seg_tgt, seg_sums): (T,) int32 with -1 padding, (T, R).
+    Row k of tile j corresponds to the k-th discovered segment of that tile.
+    """
+    t = vals.shape[0]
+    r = gathered[0].shape[1]
+    assert t % tile == 0
+    partial = vals[:, None].astype(gathered[0].dtype)
+    for u in gathered:
+        partial = partial * u
+    seg_in_tile, tile_id = _tile_segments(tgt, tile)
+    flat_seg = tile_id * tile + seg_in_tile
+    seg_sums = jax.ops.segment_sum(partial, flat_seg, num_segments=t)
+    seg_tgt = jnp.full((t,), -1, jnp.int32).at[flat_seg].max(tgt)
+    return seg_tgt, seg_sums
+
+
+def mttkrp_stash_ref(vals, tgt, gathered, *, out_rows: int):
+    """Oracle for the stash (hierarchical small-mode) variant: full (I, R)
+    accumulation — equivalent to a plain scatter-add of all partials."""
+    partial = vals[:, None].astype(gathered[0].dtype)
+    for u in gathered:
+        partial = partial * u
+    out = jnp.zeros((out_rows, partial.shape[1]), partial.dtype)
+    return out.at[tgt].add(partial)
+
+
+def scatter_segments_ref(seg_tgt, seg_sums, out_rows: int):
+    """Final per-segment update (one update per segment, not per nnz)."""
+    out = jnp.zeros((out_rows, seg_sums.shape[1]), seg_sums.dtype)
+    return out.at[jnp.maximum(seg_tgt, 0)].add(
+        jnp.where(seg_tgt[:, None] >= 0, seg_sums, 0))

@@ -1,0 +1,265 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be run as its own process (the XLA flag above must precede any jax
+initialization — do not import this module from a live jax session).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-14b \
+      --shape train_4k --mesh single --out results/qwen_train_single.json
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out-dir results/
+
+Per cell it records: lower+compile wall time, per-device memory analysis,
+cost analysis (flops/bytes), the collective schedule (op counts + payload +
+ring wire bytes), and the three roofline terms.
+"""
+import argparse        # noqa: E402
+import dataclasses     # noqa: E402
+import json            # noqa: E402
+import time            # noqa: E402
+import traceback       # noqa: E402
+
+
+def _compile_once(cfg, shape, mesh, opt_cfg):
+    """Lower + compile one step; return (record, compiled)."""
+    import jax
+    from repro.dist import context as dist_context
+    from repro.launch import steps as steps_mod
+
+    rec: dict = {}
+    t0 = time.perf_counter()
+    with mesh:
+        dist_context.set_mesh(mesh)
+        try:
+            fn, arg_sds, in_sh, out_sh = steps_mod.build_cell(
+                cfg, shape, mesh, opt_cfg=opt_cfg)
+            jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+            lowered = jitted.lower(*arg_sds)
+            rec["lower_s"] = time.perf_counter() - t0
+            t1 = time.perf_counter()
+            compiled = lowered.compile()
+            rec["compile_s"] = time.perf_counter() - t1
+        finally:
+            dist_context.set_mesh(None)
+    return rec, compiled
+
+
+def _analyse(compiled) -> dict:
+    from repro.launch import roofline as rl
+    out: dict = {}
+    try:
+        ca = compiled.cost_analysis()
+        out["flops"] = float(ca.get("flops", 0.0))
+        out["bytes_accessed"] = float(ca.get("bytes accessed", 0.0))
+        out["transcendentals"] = float(ca.get("transcendentals", 0.0))
+    except Exception as exc:
+        out["cost_analysis_error"] = repr(exc)
+        out["flops"] = out["bytes_accessed"] = 0.0
+    hlo = compiled.as_text()
+    out["hlo_bytes"] = len(hlo)
+    coll = rl.parse_collectives(hlo)
+    out["collectives"] = coll.summary()
+    out["wire_bytes"] = coll.wire_bytes
+    return out
+
+
+def _memory(compiled) -> dict:
+    rec: dict = {}
+    try:
+        ma = compiled.memory_analysis()
+        rec["memory_analysis"] = {
+            k: int(getattr(ma, k)) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "generated_code_size_in_bytes",
+             "alias_size_in_bytes") if hasattr(ma, k)}
+        arg_b = rec["memory_analysis"].get("argument_size_in_bytes", 0)
+        alias_b = rec["memory_analysis"].get("alias_size_in_bytes", 0)
+        out_b = rec["memory_analysis"].get("output_size_in_bytes", 0)
+        tmp_b = rec["memory_analysis"].get("temp_size_in_bytes", 0)
+        rec["hbm_per_device_bytes"] = arg_b + tmp_b + max(0, out_b - alias_b)
+    except Exception as exc:
+        rec["memory_analysis_error"] = repr(exc)
+    return rec
+
+
+def _depth_points(cfg) -> tuple[int, int]:
+    """Two reduced depths for the unrolled cost-model compiles."""
+    if cfg.family == "hybrid":
+        k = cfg.shared_attn_every
+        return k, 2 * k
+    if cfg.moe and cfg.first_dense_layers:
+        return cfg.first_dense_layers + 2, cfg.first_dense_layers + 4
+    return 2, 4
+
+
+def _with_depth(cfg, layers: int):
+    kw = {"num_layers": layers, "unroll_layers": True}
+    if cfg.is_encdec:
+        kw["encoder_layers"] = layers
+    return dataclasses.replace(cfg, **kw)
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, *,
+             overrides: dict | None = None,
+             skip_cost_model: bool = False) -> dict:
+    """One (arch x shape x mesh) cell.
+
+    Three compiles:
+      1. FULL config, rolled scans  -> the deliverable compile proof +
+         memory analysis (deployment peak) + schedule sanity;
+      2/3. depth La / Lb, unrolled  -> exact per-layer flops / bytes /
+         collective wire bytes; linear extrapolation to full depth (XLA's
+         cost analysis counts while bodies once, so rolled numbers are
+         depth-independent; see EXPERIMENTS.md §Dry-run methodology).
+    """
+    import jax
+    from repro.configs import get_config
+    from repro.launch import roofline as rl
+    from repro.launch import steps as steps_mod
+    from repro.launch.mesh import make_production_mesh
+    from repro.models import build_model
+    from repro.optim import adamw
+
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    rec: dict = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                 "overrides": overrides or {}}
+
+    skip = steps_mod.shape_skip_reason(cfg, shape)
+    if skip:
+        rec["status"] = "skipped"
+        rec["reason"] = skip
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = mesh.size
+    rec["chips"] = n_chips
+    opt_cfg = adamw.AdamWConfig(
+        quantize_v="int8" if cfg.name.startswith("deepseek") else "none")
+
+    # ---- 1. full-config rolled compile (the dry-run deliverable) ----------
+    crec, compiled = _compile_once(cfg, shape, mesh, opt_cfg)
+    rec.update(crec)
+    rec.update(_memory(compiled))
+    rolled = _analyse(compiled)
+    rec["rolled_analysis"] = {k: rolled[k] for k in
+                              ("flops", "bytes_accessed", "wire_bytes",
+                               "collectives", "hlo_bytes")}
+    del compiled
+
+    # ---- 2/3. unrolled depth points -> extrapolated exact cost ------------
+    if skip_cost_model:
+        flops_dev = rolled["flops"]
+        bytes_dev = rolled["bytes_accessed"]
+        wire_dev = rolled["wire_bytes"]
+    else:
+        la, lb = _depth_points(cfg)
+        pts = {}
+        for L in (la, lb):
+            _, c = _compile_once(_with_depth(cfg, L), shape, mesh, opt_cfg)
+            pts[L] = _analyse(c)
+            del c
+        rec["depth_points"] = {str(L): {k: pts[L][k] for k in
+                                        ("flops", "bytes_accessed",
+                                         "wire_bytes")} for L in (la, lb)}
+
+        def extrap(key):
+            slope = (pts[lb][key] - pts[la][key]) / (lb - la)
+            return pts[la][key] + (cfg.num_layers - la) * slope
+
+        flops_dev = extrap("flops")
+        bytes_dev = extrap("bytes_accessed")
+        wire_dev = extrap("wire_bytes")
+        # collective op counts extrapolated the same way, per kind
+        counts = {}
+        for kind in set(pts[la]["collectives"]["counts"]) | \
+                set(pts[lb]["collectives"]["counts"]):
+            ca_ = pts[la]["collectives"]["counts"].get(kind, 0)
+            cb_ = pts[lb]["collectives"]["counts"].get(kind, 0)
+            counts[kind] = int(ca_ + (cfg.num_layers - la) *
+                               (cb_ - ca_) / (lb - la))
+        rec["collective_counts_extrapolated"] = counts
+
+    rec["cost_analysis"] = {"flops": flops_dev, "bytes_accessed": bytes_dev}
+    roof = rl.roofline_terms(max(0.0, flops_dev), max(0.0, bytes_dev),
+                             max(0.0, wire_dev))
+    rec["roofline"] = roof.as_dict()
+
+    # ---- model flops (6ND) -------------------------------------------------
+    model = build_model(cfg)
+    params_sds = jax.eval_shape(model.init, jax.random.key(0))
+    total, embed, moe_expert = 0, 0, 0
+    from repro.dist.sharding import tree_paths
+    for path, leaf in tree_paths(params_sds).items():
+        n = int(leaf.size)
+        total += n
+        if path.startswith("embed/") or path.startswith("lm_head/"):
+            embed += n
+        if "/moe/w" in path and "/shared" not in path:
+            moe_expert += n
+    nonembed = total - embed
+    active = nonembed - moe_expert + (moe_expert * cfg.top_k
+                                      // max(1, cfg.num_experts))
+    info = steps_mod.SHAPES[shape]
+    n_tokens = info["batch"] * (info["seq"] if info["kind"] != "decode" else 1)
+    mf = rl.model_flops(cfg, n_tokens, params_nonembed=nonembed,
+                        params_active_nonembed=active)
+    if info["kind"] != "train":
+        mf /= 3.0                   # forward only: 2ND
+    rec["params_total"] = total
+    rec["params_nonembed"] = nonembed
+    rec["params_active_nonembed"] = active
+    rec["model_flops_global"] = mf
+    hlo_flops_global = flops_dev * n_chips
+    rec["useful_flops_ratio"] = (mf / hlo_flops_global
+                                 if hlo_flops_global > 0 else None)
+    rec["status"] = "ok"
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=("single", "multi"), default="single")
+    ap.add_argument("--out")
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg overrides key=value (e.g. remat_policy=dots_saveable)")
+    ap.add_argument("--skip-cost-model", action="store_true",
+                    help="only the full rolled compile (multi-pod pass)")
+    args = ap.parse_args()
+
+    overrides = {}
+    for ov in args.override:
+        k, v = ov.split("=", 1)
+        for cast in (int, float):
+            try:
+                v = cast(v)
+                break
+            except ValueError:
+                continue
+        overrides[k] = v
+
+    try:
+        rec = run_cell(args.arch, args.shape, args.mesh,
+                       overrides=overrides or None,
+                       skip_cost_model=args.skip_cost_model)
+    except Exception:
+        rec = {"arch": args.arch, "shape": args.shape, "mesh": args.mesh,
+               "status": "error", "traceback": traceback.format_exc()}
+    text = json.dumps(rec, indent=1, default=str)
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            f.write(text)
+    print(text)
+    if rec.get("status") == "error":
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

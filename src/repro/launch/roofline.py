@@ -1,0 +1,154 @@
+"""Roofline terms from a compiled dry-run artifact (EXPERIMENTS.md §Roofline).
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI (assignment constants).
+
+Sources:
+  * ``compiled.cost_analysis()``  -> HLO flops / bytes (PER DEVICE: the
+    compiled module is the SPMD-partitioned per-device program).
+  * ``compiled.as_text()``        -> collective ops with per-device shapes;
+    wire bytes modeled per ring algorithm (all-reduce 2x payload,
+    reduce-scatter/all-gather 1x, all-to-all 1x, collective-permute 1x).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s / link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+
+_ARRAY_RE = re.compile(r"(f64|f32|f16|bf16|f8e4m3|f8e5m2|s64|u64|s32|u32|"
+                       r"s16|u16|s8|u8|s4|u4|pred)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s+(\([^=]*?\)|\S+)\s+(" + "|".join(_COLLECTIVES) + r")(-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _array_bytes(shape_text: str) -> int:
+    total = 0
+    for m in _ARRAY_RE.finditer(shape_text):
+        dt, dims = m.groups()
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict
+    payload_bytes: dict       # per-device payload per op kind
+    wire_bytes: int           # ring-model bytes crossing links, per device
+
+    def summary(self) -> dict:
+        return {"counts": self.counts, "payload_bytes": self.payload_bytes,
+                "wire_bytes": self.wire_bytes}
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    counts: dict[str, int] = {}
+    payload: dict[str, int] = {}
+    wire = 0
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        shape_text, op, start = m.group(1), m.group(2), m.group(3)
+        if start and op in ("all-gather", "all-reduce", "reduce-scatter",
+                            "collective-permute", "all-to-all"):
+            # async start: tuple (operand, result) — use the LAST array
+            arrays = _ARRAY_RE.findall(shape_text)
+            if arrays:
+                dt, dims = arrays[-1]
+                n = 1
+                for d in dims.split(","):
+                    if d:
+                        n *= int(d)
+                size = n * _DTYPE_BYTES[dt]
+            else:
+                size = 0
+        else:
+            size = _array_bytes(shape_text)
+
+        g = 1
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            g = len(gm.group(1).split(","))
+        else:
+            gi = _GROUPS_IOTA_RE.search(line)
+            if gi:
+                g = int(gi.group(2))
+
+        counts[op] = counts.get(op, 0) + 1
+        payload[op] = payload.get(op, 0) + size
+        frac = (g - 1) / g if g > 1 else 0.0
+        if op == "all-reduce":
+            wire += int(2 * size * frac)
+        elif op == "reduce-scatter":
+            # HLO output is the scattered shard; ring wire = input*(g-1)/g
+            wire += int(size * g * frac)
+        elif op == "all-gather":
+            wire += int(size * frac)          # output-sized payload
+        else:                                  # all-to-all, permute
+            wire += int(size * frac if g > 1 else size)
+    return CollectiveStats(counts, payload, wire)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_device: float
+    hbm_bytes_per_device: float
+    wire_bytes_per_device: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Lower-bound step time: max of the three overlappable terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def as_dict(self) -> dict:
+        return {**dataclasses.asdict(self), "dominant": self.dominant,
+                "step_time_s": self.step_time_s}
+
+
+def roofline_terms(flops_per_device: float, hbm_bytes: float,
+                   wire_bytes: float) -> Roofline:
+    return Roofline(
+        flops_per_device=flops_per_device,
+        hbm_bytes_per_device=hbm_bytes,
+        wire_bytes_per_device=wire_bytes,
+        compute_s=flops_per_device / PEAK_FLOPS,
+        memory_s=hbm_bytes / HBM_BW,
+        collective_s=wire_bytes / LINK_BW,
+    )
+
+
+def model_flops(cfg, n_tokens: int, *, params_nonembed: int,
+                params_active_nonembed: int | None = None) -> float:
+    """MODEL_FLOPS = 6 * N * D (dense) / 6 * N_active * D (MoE)."""
+    n = params_active_nonembed if params_active_nonembed is not None \
+        else params_nonembed
+    return 6.0 * n * n_tokens

@@ -1,0 +1,277 @@
+"""Step builders + abstract input specs for every (arch x shape) dry-run cell.
+
+Shapes (assigned):
+  train_4k    seq 4096,   global_batch 256   -> train_step (fwd+bwd+AdamW)
+  prefill_32k seq 32768,  global_batch 32    -> prefill (fwd, last-pos logits)
+  decode_32k  kv 32768,   global_batch 128   -> serve_step (1 new token)
+  long_500k   kv 524288,  global_batch 1     -> serve_step; sub-quadratic
+                                                archs only (DESIGN.md §5)
+
+``input_specs`` returns jax.ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, no allocation). Batch dims shard over (pod,)+data when divisible,
+else stay replicated (long_500k's batch=1) and the KV length dim takes the
+data sharding instead (decode sequence parallelism).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist import sharding as shd
+from repro.models import build_model
+from repro.models import encdec as encdec_mod
+from repro.optim import adamw
+
+SHAPES = {
+    "train_4k":    dict(kind="train",   seq=4096,   batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768,  batch=32),
+    "decode_32k":  dict(kind="decode",  seq=32768,  batch=128),
+    "long_500k":   dict(kind="decode",  seq=524288, batch=1),
+}
+
+ENC_LEN = 4096          # encoder memory length for enc-dec decode shapes
+
+
+def shape_skip_reason(cfg, shape_name: str) -> str | None:
+    """Assignment rules: long_500k only for sub-quadratic archs."""
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        return ("full-attention arch: 500k-token decode KV does not meet the "
+                "sub-quadratic requirement (DESIGN.md §5)")
+    return None
+
+
+def _dp(mesh):
+    f = shd.fsdp_axes(mesh)
+    return f if len(f) > 1 else f[0]
+
+
+def _dp_size(mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in shd.fsdp_axes(mesh)]))
+
+
+def _batch_spec(mesh, b: int, ndim: int):
+    dp = _dp(mesh)
+    spec = [None] * ndim
+    if b % _dp_size(mesh) == 0:
+        spec[0] = dp
+    return NamedSharding(mesh, P(*spec))
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# --------------------------------------------------------------- batch specs
+def batch_specs(cfg, shape_name: str, mesh):
+    """(ShapeDtypeStruct tree, sharding tree) for the step's batch argument."""
+    info = SHAPES[shape_name]
+    b, s = info["batch"], info["seq"]
+    kind = info["kind"]
+    fd = cfg.frontend_dim or cfg.d_model
+
+    if kind in ("train", "prefill"):
+        batch, shard = {}, {}
+        if cfg.is_encdec:
+            batch["embeds"] = _sds((b, s, fd), jnp.bfloat16)
+            shard["embeds"] = _batch_spec(mesh, b, 3)
+            batch["tokens"] = _sds((b, s), jnp.int32)
+            shard["tokens"] = _batch_spec(mesh, b, 2)
+        elif cfg.input_mode == "embeddings":
+            batch["embeds"] = _sds((b, s, fd), jnp.bfloat16)
+            shard["embeds"] = _batch_spec(mesh, b, 3)
+        else:
+            batch["tokens"] = _sds((b, s), jnp.int32)
+            shard["tokens"] = _batch_spec(mesh, b, 2)
+        if kind == "train":
+            batch["labels"] = _sds((b, s), jnp.int32)
+            shard["labels"] = _batch_spec(mesh, b, 2)
+        return batch, shard
+
+    # decode: one new token against a KV cache of length s
+    if cfg.input_mode == "embeddings" and not cfg.is_encdec:
+        tok = _sds((b, 1, fd), jnp.bfloat16)
+        tok_shard = _batch_spec(mesh, b, 3)
+    else:
+        tok = _sds((b, 1), jnp.int32)
+        tok_shard = _batch_spec(mesh, b, 2)
+    pos = _sds((), jnp.int32)
+    pos_shard = NamedSharding(mesh, P())
+    return {"tokens": tok, "pos": pos}, {"tokens": tok_shard, "pos": pos_shard}
+
+
+def cache_specs(cfg, shape_name: str, mesh):
+    info = SHAPES[shape_name]
+    b, s = info["batch"], info["seq"]
+    model = build_model(cfg)
+    if cfg.is_encdec:
+        cache = jax.eval_shape(
+            lambda: model.init_cache(b, s, enc_len=ENC_LEN))
+    else:
+        cache = jax.eval_shape(lambda: model.init_cache(b, s))
+    shards = _cache_shardings(mesh, cache, b)
+    return cache, shards
+
+
+def _cache_shardings(mesh, cache_tree, batch: int):
+    dp = _dp(mesh)
+    dps = _dp_size(mesh)
+    tp = mesh.shape["model"]
+
+    def one(kp, leaf):
+        key = str(kp[-1].key) if hasattr(kp[-1], "key") else ""
+        nd = leaf.ndim
+        shape = leaf.shape
+        spec = [None] * nd
+
+        def put(i, ax, size):
+            if spec[i] is None and shape[i] % size == 0 and ax not in spec:
+                spec[i] = ax
+
+        if key in ("k", "v", "attn_k", "attn_v", "mem_k", "mem_v") and nd == 5:
+            # (L|G, B, S, KV, hd)
+            if shape[1] % dps == 0:
+                put(1, dp, dps)
+            else:
+                put(2, dp, dps)          # tiny batch: sequence-parallel cache
+            if shape[3] % tp == 0:
+                put(3, "model", tp)
+            elif shape[4] % tp == 0:
+                put(4, "model", tp)      # kv < tp: shard head_dim instead
+            else:
+                put(2, "model", tp)      # neither divides: KV-length shard
+        elif key in ("ckv", "kr") and nd == 4:
+            # (L, B, S, lora|rope)
+            if shape[1] % dps == 0:
+                put(1, dp, dps)
+            else:
+                put(2, dp, dps)
+            put(3, "model", tp)
+        elif key == "ssm":
+            if nd == 5:                   # (L, B, H, N, P)
+                put(1, dp, dps)
+                put(2, "model", tp)
+            elif nd == 6:                 # (G, per, B, H, N, P)
+                put(2, dp, dps)
+                put(3, "model", tp)
+        elif key == "conv":
+            if nd == 4:                   # (L, B, W, C)
+                put(1, dp, dps)
+                put(3, "model", tp)
+            elif nd == 5:                 # (G, per, B, W, C)
+                put(2, dp, dps)
+                put(4, "model", tp)
+        else:
+            if nd >= 2 and shape[1] == batch:
+                put(1, dp, dps)
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, cache_tree)
+
+
+# ---------------------------------------------------------------- state specs
+def abstract_train_state(cfg, opt_cfg: adamw.AdamWConfig):
+    model = build_model(cfg)
+    params = jax.eval_shape(model.init, jax.random.key(0))
+    opt = jax.eval_shape(functools.partial(adamw.init_state, cfg=opt_cfg),
+                         params)
+    return {"params": params, "opt": opt}
+
+
+def train_state_shardings(mesh, state_sds):
+    p_sh = shd.param_shardings(mesh, state_sds["params"])
+    opt_sh: dict[str, Any] = {}
+    for k, v in state_sds["opt"].items():
+        if k == "step":
+            opt_sh[k] = NamedSharding(mesh, P())
+        elif k == "v_scale":
+            opt_sh[k] = jax.tree.map(
+                lambda _: NamedSharding(mesh, P()), v)
+        else:
+            opt_sh[k] = shd.param_shardings(mesh, v)
+    return {"params": p_sh, "opt": opt_sh}
+
+
+# ----------------------------------------------------------------- the steps
+def make_train_step(cfg, opt_cfg: adamw.AdamWConfig):
+    model = build_model(cfg)
+
+    def train_step(state, batch):
+        def loss_fn(p):
+            return model.loss(p, batch)
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state["params"])
+        new_params, new_opt, om = adamw.apply_updates(
+            state["params"], grads, state["opt"], opt_cfg)
+        out_metrics = {"loss": loss, **metrics, **om}
+        return {"params": new_params, "opt": new_opt}, out_metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg):
+    model = build_model(cfg)
+
+    def prefill_step(params, batch):
+        logits, _ = model.forward(params, batch)
+        return logits[:, -1]          # next-token logits
+
+    return prefill_step
+
+
+def make_serve_step(cfg):
+    model = build_model(cfg)
+
+    def serve_step(params, cache, tokens, pos):
+        logits, cache = model.decode_step(params, cache, tokens, pos)
+        return logits[:, -1], cache
+
+    return serve_step
+
+
+# ------------------------------------------------------------- cell assembly
+def build_cell(cfg, shape_name: str, mesh, *,
+               opt_cfg: adamw.AdamWConfig | None = None):
+    """Returns (fn, arg_sds tuple, in_shardings tuple, out_shardings)."""
+    info = SHAPES[shape_name]
+    kind = info["kind"]
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+    repl = NamedSharding(mesh, P())
+
+    if kind == "train":
+        state_sds = abstract_train_state(cfg, opt_cfg)
+        state_sh = train_state_shardings(mesh, state_sds)
+        batch_sds, batch_sh = batch_specs(cfg, shape_name, mesh)
+        fn = make_train_step(cfg, opt_cfg)
+        metrics_sh = {k: repl for k in
+                      ("loss", "nll", "aux", "lr", "grad_norm")}
+        return (fn, (state_sds, batch_sds), (state_sh, batch_sh),
+                (state_sh, metrics_sh))
+
+    if kind == "prefill":
+        model = build_model(cfg)
+        params_sds = jax.eval_shape(model.init, jax.random.key(0))
+        params_sh = shd.param_shardings(mesh, params_sds, mode="serve")
+        batch_sds, batch_sh = batch_specs(cfg, shape_name, mesh)
+        fn = make_prefill_step(cfg)
+        b = info["batch"]
+        out_sh = _batch_spec(mesh, b, 2)
+        return fn, (params_sds, batch_sds), (params_sh, batch_sh), out_sh
+
+    # decode
+    model = build_model(cfg)
+    params_sds = jax.eval_shape(model.init, jax.random.key(0))
+    params_sh = shd.param_shardings(mesh, params_sds, mode="serve")
+    cache_sds, cache_sh = cache_specs(cfg, shape_name, mesh)
+    io_sds, io_sh = batch_specs(cfg, shape_name, mesh)
+    fn = make_serve_step(cfg)
+    b = info["batch"]
+    logits_sh = _batch_spec(mesh, b, 2)
+    return (fn,
+            (params_sds, cache_sds, io_sds["tokens"], io_sds["pos"]),
+            (params_sh, cache_sh, io_sh["tokens"], io_sh["pos"]),
+            (logits_sh, cache_sh))

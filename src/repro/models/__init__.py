@@ -1,0 +1,2 @@
+from .model import Model, build_model, param_count
+__all__ = ["Model", "build_model", "param_count"]

@@ -1,0 +1,285 @@
+"""Attention: GQA (with optional QKV bias / sliding window) and MLA
+(DeepSeek compressed-KV, absorbed decode path).
+
+Train/prefill attention has two implementations:
+
+* ``full``    — materialized (S x S) scores; fine to 8k.
+* ``chunked`` — online-softmax over KV chunks via ``lax.scan`` (flash-style at
+  the XLA level): O(S x chunk) live memory, required for the 32k prefill
+  shapes and the memory-term hillclimb in EXPERIMENTS.md §Perf.
+
+GQA uses grouped einsums (no materialized KV repetition) so HBM traffic
+reflects the true KV volume — this matters for the roofline memory term.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .modules import linear, linear_init, rmsnorm, rmsnorm_init, Rng, \
+    rope_angles, apply_rope
+
+NEG_INF = -1e30
+
+
+# ----------------------------------------------------------------------- GQA
+def gqa_init(rng: Rng, cfg, dtype):
+    h, kv, hd, d = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim, cfg.d_model
+    return {
+        "wq": linear_init(rng, d, h * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wk": linear_init(rng, d, kv * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wv": linear_init(rng, d, kv * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wo": linear_init(rng, h * hd, d, dtype=dtype,
+                          scale=(h * hd) ** -0.5 / (2 * cfg.num_layers) ** 0.5),
+    }
+
+
+def _split_heads(x, n, hd):
+    return x.reshape(x.shape[:-1] + (n, hd))
+
+
+def _causal_mask(sq, skv, offset, window):
+    """(sq, skv) bool mask; offset = absolute position of query row 0."""
+    qi = jnp.arange(sq)[:, None] + offset
+    kj = jnp.arange(skv)[None, :]
+    m = qi >= kj
+    if window is not None:
+        m = m & (qi - kj < window)
+    return m
+
+
+def _full_attn(q, k, v, mask):
+    """q: (B,Sq,KV,G,hd)  k,v: (B,Skv,KV,hd)  mask: (Sq,Skv) bool."""
+    scale = q.shape[-1] ** -0.5
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", q, k).astype(jnp.float32) * scale
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
+
+
+def _attn_constrain(q5, k, v):
+    """Shard attention activations (DESIGN.md §4).
+
+    Prefer kv-head sharding over `model`; when the head count does not divide
+    the axis (e.g. 36-head minicpm, kv=8 GQA on tp=16), fall back to
+    query-sequence sharding (context parallelism): scores shard over Sq, K/V
+    replicate across the model axis (one small all-gather per layer instead
+    of fully replicated O(S^2) score tensors).
+    """
+    from repro.dist import context as dist_context
+    mesh = dist_context.get_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        return q5, k, v
+    tp = mesh.shape["model"]
+    if q5.shape[2] % tp == 0:
+        q5 = dist_context.constrain(q5, "dp", None, "tp", None, None)
+        k = dist_context.constrain(k, "dp", None, "tp", None)
+        v = dist_context.constrain(v, "dp", None, "tp", None)
+    elif q5.shape[1] % tp == 0:
+        q5 = dist_context.constrain(q5, "dp", "tp", None, None, None)
+        k = dist_context.constrain(k, "dp", None, None, None)
+        v = dist_context.constrain(v, "dp", None, None, None)
+    return q5, k, v
+
+
+def _chunked_attn(q, k, v, *, offset, window, chunk: int = 1024,
+                  unroll: bool = False, causal: bool = True):
+    """Online-softmax attention over KV chunks (flash-style, XLA level).
+
+    q: (B,Sq,KV,G,hd); k,v: (B,Skv,KV,hd). Causal with optional window.
+    """
+    b, sq, kvh, g, hd = q.shape
+    vd = v.shape[-1]                       # may differ from hd (MLA)
+    skv = k.shape[1]
+    chunk = min(chunk, skv)
+    assert skv % chunk == 0, (skv, chunk)
+    nchunks = skv // chunk
+    scale = hd ** -0.5
+    kc = k.reshape(b, nchunks, chunk, kvh, hd)
+    vc = v.reshape(b, nchunks, chunk, kvh, vd)
+
+    def step(carry, xs):
+        m_prev, l_prev, acc = carry
+        kb, vb, ci = xs
+        scores = jnp.einsum("bqkgh,bskh->bkgqs", q, kb).astype(jnp.float32) * scale
+        if causal:
+            mask = _causal_mask(sq, chunk, offset - ci * chunk, window)
+            scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+        m_cur = jnp.maximum(m_prev, scores.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(scores - m_cur[..., None])
+        l_cur = l_prev * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bkgqs,bskh->bkgqh", p.astype(q.dtype), vb).astype(jnp.float32)
+        return (m_cur, l_cur, acc), None
+
+    m0 = jnp.full((b, kvh, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kvh, g, sq), jnp.float32)
+    acc0 = jnp.zeros((b, kvh, g, sq, vd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, acc0),
+        (kc.swapaxes(0, 1), vc.swapaxes(0, 1), jnp.arange(nchunks)),
+        unroll=unroll)
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.astype(q.dtype).transpose(0, 3, 1, 2, 4)   # (B,Sq,KV,G,hd)
+
+
+def gqa_apply(p, cfg, x, *, positions, impl: str = "full", chunk: int = 1024):
+    """Training/prefill self-attention. x: (B,S,D); positions: (S,) int32."""
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    g = h // kvh
+    b, s, _ = x.shape
+    q = _split_heads(linear(p["wq"], x), h, hd)
+    k = _split_heads(linear(p["wk"], x), kvh, hd)
+    v = _split_heads(linear(p["wv"], x), kvh, hd)
+    cos, sin = rope_angles(positions, hd, cfg.rope_theta)
+    q = apply_rope(q, cos[None, :, None], sin[None, :, None])
+    k = apply_rope(k, cos[None, :, None], sin[None, :, None])
+    q = q.reshape(b, s, kvh, g, hd)
+    q, k, v = _attn_constrain(q, k, v)
+    if impl == "chunked":
+        out = _chunked_attn(q, k, v, offset=0, window=cfg.sliding_window,
+                            chunk=chunk, unroll=cfg.unroll_layers)
+    else:
+        mask = _causal_mask(s, s, 0, cfg.sliding_window)
+        out = _full_attn(q, k, v, mask)
+    out = out.reshape(b, s, h * hd)
+    return linear(p["wo"], out)
+
+
+def gqa_decode(p, cfg, x, cache_k, cache_v, pos):
+    """Single-token decode. x: (B,1,D); cache_k/v: (B,S,KV,hd); pos: scalar
+    int32 (current length, also the write index). Returns (out, k, v updated).
+    """
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    g = h // kvh
+    b = x.shape[0]
+    s = cache_k.shape[1]
+    q = _split_heads(linear(p["wq"], x), h, hd)        # (B,1,H,hd)
+    k = _split_heads(linear(p["wk"], x), kvh, hd)
+    v = _split_heads(linear(p["wv"], x), kvh, hd)
+    cos, sin = rope_angles(jnp.asarray(pos)[None], hd, cfg.rope_theta)
+    q = apply_rope(q, cos[None, :, None], sin[None, :, None])
+    k = apply_rope(k, cos[None, :, None], sin[None, :, None])
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k.astype(cache_k.dtype), pos, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v.astype(cache_v.dtype), pos, axis=1)
+    q = q.reshape(b, 1, kvh, g, hd)
+    scale = hd ** -0.5
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", q, cache_k).astype(jnp.float32)
+    scores = scores * scale
+    kj = jnp.arange(s)[None, None, None, None, :]
+    valid = kj <= pos
+    if cfg.sliding_window is not None:
+        valid = valid & (pos - kj < cfg.sliding_window)
+    scores = jnp.where(valid, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, cache_v)
+    out = out.reshape(b, 1, h * hd)
+    return linear(p["wo"], out), cache_k, cache_v
+
+
+# ----------------------------------------------------------------------- MLA
+def mla_init(rng: Rng, cfg, dtype):
+    d = cfg.d_model
+    h = cfg.num_heads
+    qk_nope, qk_rope, vh = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    p = {}
+    if cfg.q_lora_rank:
+        p["wdq"] = linear_init(rng, d, cfg.q_lora_rank, dtype=dtype)
+        p["q_norm"] = rmsnorm_init(cfg.q_lora_rank, dtype)
+        p["wuq"] = linear_init(rng, cfg.q_lora_rank, h * (qk_nope + qk_rope),
+                               dtype=dtype)
+    else:
+        p["wq"] = linear_init(rng, d, h * (qk_nope + qk_rope), dtype=dtype)
+    p["wdkv"] = linear_init(rng, d, cfg.kv_lora_rank, dtype=dtype)
+    p["kv_norm"] = rmsnorm_init(cfg.kv_lora_rank, dtype)
+    p["wuk"] = linear_init(rng, cfg.kv_lora_rank, h * qk_nope, dtype=dtype)
+    p["wuv"] = linear_init(rng, cfg.kv_lora_rank, h * vh, dtype=dtype)
+    p["wkr"] = linear_init(rng, d, qk_rope, dtype=dtype)   # shared-head k_rope
+    p["wo"] = linear_init(rng, h * vh, d, dtype=dtype,
+                          scale=(h * vh) ** -0.5 / (2 * cfg.num_layers) ** 0.5)
+    return p
+
+
+def _mla_q(p, cfg, x):
+    h = cfg.num_heads
+    qk_nope, qk_rope = cfg.nope_head_dim, cfg.rope_head_dim
+    if cfg.q_lora_rank:
+        cq = rmsnorm(p["q_norm"], linear(p["wdq"], x), cfg.norm_eps)
+        q = linear(p["wuq"], cq)
+    else:
+        q = linear(p["wq"], x)
+    q = q.reshape(x.shape[:-1] + (h, qk_nope + qk_rope))
+    return q[..., :qk_nope], q[..., qk_nope:]
+
+
+def mla_apply(p, cfg, x, *, positions, impl: str = "full", chunk: int = 1024):
+    """MLA train/prefill: decompress K/V for all positions (non-absorbed)."""
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    qk_nope, qk_rope, vh = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    q_nope, q_rope = _mla_q(p, cfg, x)
+    cos, sin = rope_angles(positions, qk_rope, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos[None, :, None], sin[None, :, None])
+
+    ckv = rmsnorm(p["kv_norm"], linear(p["wdkv"], x), cfg.norm_eps)
+    k_nope = linear(p["wuk"], ckv).reshape(b, s, h, qk_nope)
+    v = linear(p["wuv"], ckv).reshape(b, s, h, vh)
+    k_rope = apply_rope(linear(p["wkr"], x), cos, sin)      # (B,S,rope) shared
+
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)          # (B,S,H,nope+rope)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None], (b, s, h, qk_rope))],
+        axis=-1)
+    # MLA is MHA (kv heads == heads): reuse grouped kernels with G=1
+    q5 = q.reshape(b, s, h, 1, qk_nope + qk_rope)
+    q5, k, v = _attn_constrain(q5, k, v)
+    if impl == "chunked":
+        out = _chunked_attn(q5, k, v, offset=0, window=None, chunk=chunk,
+                            unroll=cfg.unroll_layers)
+    else:
+        out = _full_attn(q5, k, v, _causal_mask(s, s, 0, None))
+    out = out.reshape(b, s, h * vh)
+    return linear(p["wo"], out)
+
+
+def mla_decode(p, cfg, x, cache_ckv, cache_kr, pos):
+    """Absorbed-matrices MLA decode (DeepSeek-V2 inference optimization):
+    attend directly in the kv_lora latent space; cache is (B,S,kv_lora) +
+    (B,S,rope) — 64x smaller than materialized K/V for 128 heads."""
+    b = x.shape[0]
+    h = cfg.num_heads
+    qk_nope, qk_rope, vh = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    lora = cfg.kv_lora_rank
+    s = cache_ckv.shape[1]
+
+    q_nope, q_rope = _mla_q(p, cfg, x)                  # (B,1,H,*)
+    cos, sin = rope_angles(jnp.asarray(pos)[None], qk_rope, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos[None, :, None], sin[None, :, None])
+
+    ckv = rmsnorm(p["kv_norm"], linear(p["wdkv"], x), cfg.norm_eps)  # (B,1,lora)
+    kr = apply_rope(linear(p["wkr"], x), cos, sin)                    # (B,1,rope)
+    cache_ckv = jax.lax.dynamic_update_slice_in_dim(
+        cache_ckv, ckv.astype(cache_ckv.dtype), pos, axis=1)
+    cache_kr = jax.lax.dynamic_update_slice_in_dim(
+        cache_kr, kr.astype(cache_kr.dtype), pos, axis=1)
+
+    # absorb W_uk into q: q_eff (B,1,H,lora)
+    wuk = p["wuk"]["w"].reshape(lora, h, qk_nope)
+    q_eff = jnp.einsum("bqhn,lhn->bqhl", q_nope.astype(jnp.float32),
+                       wuk.astype(jnp.float32))
+    scores = (jnp.einsum("bqhl,bsl->bhqs", q_eff,
+                         cache_ckv.astype(jnp.float32))
+              + jnp.einsum("bqhr,bsr->bhqs", q_rope.astype(jnp.float32),
+                           cache_kr.astype(jnp.float32)))
+    scores = scores * ((qk_nope + qk_rope) ** -0.5)
+    valid = jnp.arange(s)[None, None, None, :] <= pos
+    scores = jnp.where(valid, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhqs,bsl->bqhl", probs, cache_ckv.astype(jnp.float32))
+    wuv = p["wuv"]["w"].reshape(lora, h, vh)
+    out = jnp.einsum("bqhl,lhv->bqhv", ctx, wuv.astype(jnp.float32))
+    out = out.astype(x.dtype).reshape(b, 1, h * vh)
+    return linear(p["wo"], out), cache_ckv, cache_kr

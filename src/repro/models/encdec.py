@@ -1,0 +1,210 @@
+"""Encoder-decoder stack (seamless-m4t-large-v2 backbone).
+
+Encoder: bidirectional self-attention over precomputed frame embeddings (the
+speech frontend is a stub per the assignment). Decoder: causal self-attention
++ cross-attention over encoder memory. Decode caches: self-attn K/V per layer
+plus cross-attn K/V precomputed once from the encoder memory.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from .modules import (Rng, dtype_of, embedding_init, linear, linear_init,
+                      rmsnorm, rmsnorm_init)
+from .transformer import mlp_init, mlp_apply, _remat
+from repro.core.embed_grad import embedding_lookup
+
+
+def _xattn_init(rng: Rng, cfg, dtype):
+    h, kv, hd, d = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim, cfg.d_model
+    return {"wq": linear_init(rng, d, h * hd, dtype=dtype),
+            "wk": linear_init(rng, d, kv * hd, dtype=dtype),
+            "wv": linear_init(rng, d, kv * hd, dtype=dtype),
+            "wo": linear_init(rng, h * hd, d, dtype=dtype,
+                              scale=(h * hd) ** -0.5 / (2 * cfg.num_layers) ** 0.5)}
+
+
+def enc_layer_init(rng: Rng, cfg, dtype):
+    return {"ln1": rmsnorm_init(cfg.d_model, dtype),
+            "attn": attn.gqa_init(rng, cfg, dtype),
+            "ln2": rmsnorm_init(cfg.d_model, dtype),
+            "mlp": mlp_init(rng, cfg, dtype, cfg.d_ff)}
+
+
+def dec_layer_init(rng: Rng, cfg, dtype):
+    p = enc_layer_init(rng, cfg, dtype)
+    p["ln_x"] = rmsnorm_init(cfg.d_model, dtype)
+    p["xattn"] = _xattn_init(rng, cfg, dtype)
+    return p
+
+
+def _bidir_attn(p, cfg, x, positions):
+    """Encoder self-attention (no causal mask)."""
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    b, s, _ = x.shape
+    q = linear(p["wq"], x).reshape(b, s, h, hd)
+    k = linear(p["wk"], x).reshape(b, s, kvh, hd)
+    v = linear(p["wv"], x).reshape(b, s, kvh, hd)
+    cos, sin = attn.rope_angles(positions, hd, cfg.rope_theta)
+    q = attn.apply_rope(q, cos[None, :, None], sin[None, :, None])
+    k = attn.apply_rope(k, cos[None, :, None], sin[None, :, None])
+    q = q.reshape(b, s, kvh, h // kvh, hd)
+    q, k, v = attn._attn_constrain(q, k, v)
+    if s > 8192:
+        out = attn._chunked_attn(q, k, v, offset=0, window=None,
+                                 causal=False,
+                                 unroll=getattr(cfg, "unroll_layers", False))
+    else:
+        out = attn._full_attn(q, k, v, jnp.ones((s, s), bool))
+    return linear(p["wo"], out.reshape(b, s, h * hd))
+
+
+def _cross_attn(p, cfg, x, mem_k, mem_v):
+    """x: (B,Sq,D); mem_k/v: (B,Skv,KV,hd) precomputed from encoder memory."""
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    b, sq, _ = x.shape
+    skv = mem_k.shape[1]
+    q = linear(p["wq"], x).reshape(b, sq, kvh, h // kvh, hd)
+    q, mem_k, mem_v = attn._attn_constrain(q, mem_k, mem_v)
+    if max(sq, skv) > 8192 and sq > 1:
+        out = attn._chunked_attn(q, mem_k, mem_v, offset=0, window=None,
+                                 causal=False,
+                                 unroll=getattr(cfg, "unroll_layers", False))
+    else:
+        out = attn._full_attn(q, mem_k, mem_v, jnp.ones((sq, skv), bool))
+    return linear(p["wo"], out.reshape(b, sq, h * hd))
+
+
+def _mem_kv(p, cfg, memory):
+    kvh, hd = cfg.num_kv_heads, cfg.head_dim
+    b, s, _ = memory.shape
+    k = linear(p["wk"], memory).reshape(b, s, kvh, hd)
+    v = linear(p["wv"], memory).reshape(b, s, kvh, hd)
+    return k, v
+
+
+def init_params(cfg, key):
+    dtype = dtype_of(cfg.param_dtype)
+    rng = Rng(key)
+    fd = cfg.frontend_dim or cfg.d_model
+    p = {"embed": embedding_init(rng, cfg.padded_vocab, cfg.d_model, dtype),
+         "frontend_proj": linear_init(rng, fd, cfg.d_model, dtype=dtype)}
+    ekeys = jax.random.split(rng.next(), cfg.encoder_layers)
+    p["enc_layers"] = jax.vmap(
+        lambda k: enc_layer_init(Rng(k), cfg, dtype))(ekeys)
+    dkeys = jax.random.split(rng.next(), cfg.num_layers)
+    p["dec_layers"] = jax.vmap(
+        lambda k: dec_layer_init(Rng(k), cfg, dtype))(dkeys)
+    p["ln_enc"] = rmsnorm_init(cfg.d_model, dtype)
+    p["ln_f"] = rmsnorm_init(cfg.d_model, dtype)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = linear_init(rng, cfg.d_model, cfg.padded_vocab, dtype=dtype)
+    return p
+
+
+def encode(params, cfg, embeds):
+    """embeds: (B,Senc,Fd) precomputed frame embeddings -> memory (B,Senc,D)."""
+    cd = dtype_of(cfg.compute_dtype)
+    x = linear(params["frontend_proj"], embeds.astype(cd))
+    s = x.shape[1]
+    positions = jnp.arange(s, dtype=jnp.int32)
+
+    def body(h, lp):
+        hh = rmsnorm(lp["ln1"], h, cfg.norm_eps)
+        h = h + _bidir_attn(lp["attn"], cfg, hh, positions)
+        hh = rmsnorm(lp["ln2"], h, cfg.norm_eps)
+        return h + mlp_apply(lp["mlp"], cfg, hh), None
+
+    x, _ = jax.lax.scan(_remat(body, cfg), x, params["enc_layers"], unroll=cfg.unroll_layers)
+    return rmsnorm(params["ln_enc"], x, cfg.norm_eps)
+
+
+def forward(params, cfg, batch, *, impl: str | None = None):
+    """batch: {"embeds": (B,Senc,Fd), "tokens": (B,Sdec)}. Teacher-forced."""
+    cd = dtype_of(cfg.compute_dtype)
+    memory = encode(params, cfg, batch["embeds"])
+    x = embedding_lookup(params["embed"]["table"], batch["tokens"],
+                         cfg.embed_grad).astype(cd) * (cfg.d_model ** 0.5)
+    s = x.shape[1]
+    if impl is None:
+        impl = "chunked" if s > 8192 else "full"
+    positions = jnp.arange(s, dtype=jnp.int32)
+
+    def body(h, lp):
+        hh = rmsnorm(lp["ln1"], h, cfg.norm_eps)
+        h = h + attn.gqa_apply(lp["attn"], cfg, hh, positions=positions,
+                               impl=impl)
+        mk, mv = _mem_kv(lp["xattn"], cfg, memory)
+        hh = rmsnorm(lp["ln_x"], h, cfg.norm_eps)
+        h = h + _cross_attn(lp["xattn"], cfg, hh, mk, mv)
+        hh = rmsnorm(lp["ln2"], h, cfg.norm_eps)
+        return h + mlp_apply(lp["mlp"], cfg, hh), None
+
+    x, _ = jax.lax.scan(_remat(body, cfg), x, params["dec_layers"], unroll=cfg.unroll_layers)
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x,
+                            params["embed"]["table"].astype(x.dtype))
+    else:
+        logits = linear(params["lm_head"], x)
+    from repro.dist.context import constrain
+    logits = constrain(logits.astype(jnp.float32), "dp", None, "tp")
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def init_cache(cfg, batch: int, max_len: int, enc_len: int,
+               dtype=jnp.bfloat16):
+    L = cfg.num_layers
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    return {"k": jnp.zeros((L, batch, max_len, kv, hd), dtype),
+            "v": jnp.zeros((L, batch, max_len, kv, hd), dtype),
+            "mem_k": jnp.zeros((L, batch, enc_len, kv, hd), dtype),
+            "mem_v": jnp.zeros((L, batch, enc_len, kv, hd), dtype)}
+
+
+def prefill_memory(params, cfg, cache, embeds):
+    """Run the encoder once and fill the cross-attn K/V cache."""
+    memory = encode(params, cfg, embeds)
+
+    def body(_, lp):
+        mk, mv = _mem_kv(lp["xattn"], cfg, memory)
+        return None, (mk, mv)
+
+    _, (mk, mv) = jax.lax.scan(body, None, params["dec_layers"])
+    cache = dict(cache)
+    cache["mem_k"] = mk.astype(cache["mem_k"].dtype)
+    cache["mem_v"] = mv.astype(cache["mem_v"].dtype)
+    return cache
+
+
+def decode_step(params, cfg, cache, tokens, pos):
+    """tokens: (B,1) int32. Returns (logits, cache)."""
+    cd = dtype_of(cfg.compute_dtype)
+    x = embedding_lookup(params["embed"]["table"], tokens,
+                         cfg.embed_grad).astype(cd) * (cfg.d_model ** 0.5)
+
+    def body(h, xs):
+        lp, ck, cv, mk, mv = xs
+        hh = rmsnorm(lp["ln1"], h, cfg.norm_eps)
+        a, ck, cv = attn.gqa_decode(lp["attn"], cfg, hh, ck, cv, pos)
+        h = h + a
+        hh = rmsnorm(lp["ln_x"], h, cfg.norm_eps)
+        h = h + _cross_attn(lp["xattn"], cfg, hh,
+                            mk.astype(cd), mv.astype(cd))
+        hh = rmsnorm(lp["ln2"], h, cfg.norm_eps)
+        return h + mlp_apply(lp["mlp"], cfg, hh), (ck, cv)
+
+    x, (nk, nv) = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["k"], cache["v"],
+                  cache["mem_k"], cache["mem_v"]), unroll=cfg.unroll_layers)
+    cache = dict(cache)
+    cache["k"], cache["v"] = nk, nv
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x,
+                            params["embed"]["table"].astype(x.dtype))
+    else:
+        logits = linear(params["lm_head"], x)
+    return logits.astype(jnp.float32), cache

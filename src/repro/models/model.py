@@ -1,0 +1,54 @@
+"""Family dispatch: one ``Model`` facade over all assigned architectures."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import encdec, transformer
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: Any
+    init: Callable                 # (key) -> params
+    loss: Callable                 # (params, batch) -> (loss, metrics)
+    forward: Callable              # (params, batch) -> (logits, aux)
+    init_cache: Callable           # (batch, max_len, **kw) -> cache
+    decode_step: Callable          # (params, cache, tokens, pos) -> (logits, cache)
+
+
+def build_model(cfg) -> Model:
+    if cfg.is_encdec:
+        def loss(params, batch):
+            logits, aux = encdec.forward(params, cfg, batch)
+            nll = transformer.parallel_cross_entropy(logits, batch["labels"])
+            return nll.mean(), {"nll": nll.mean(), "aux": aux}
+
+        return Model(
+            cfg=cfg,
+            init=lambda key: encdec.init_params(cfg, key),
+            loss=loss,
+            forward=lambda params, batch: encdec.forward(params, cfg, batch),
+            init_cache=lambda batch, max_len, enc_len=1024, dtype=jnp.bfloat16:
+                encdec.init_cache(cfg, batch, max_len, enc_len, dtype),
+            decode_step=lambda params, cache, tokens, pos:
+                encdec.decode_step(params, cfg, cache, tokens, pos),
+        )
+
+    return Model(
+        cfg=cfg,
+        init=lambda key: transformer.init_params(cfg, key),
+        loss=lambda params, batch: transformer.loss_fn(params, cfg, batch),
+        forward=lambda params, batch: transformer.forward(params, cfg, batch),
+        init_cache=lambda batch, max_len, dtype=jnp.bfloat16:
+            transformer.init_cache(cfg, batch, max_len, dtype),
+        decode_step=lambda params, cache, tokens, pos:
+            transformer.decode_step(params, cfg, cache, tokens, pos),
+    )
+
+
+def param_count(params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))

@@ -1,0 +1,92 @@
+"""Minimal pure-JAX module system: param dicts + apply functions.
+
+No flax/haiku dependency (not installed offline). Conventions:
+
+* params are nested dicts of jnp arrays; names are stable and meaningful —
+  dist/sharding.py maps (path, shape) -> PartitionSpec from these names.
+* init functions take an ``Rng`` helper (deterministic fold_in counter) so the
+  same code runs under ``jax.eval_shape`` for the dry-run's allocation-free
+  parameter ShapeDtypeStructs.
+* compute dtype is applied at use (params stored in param_dtype, matmuls in
+  compute_dtype, softmax/norms in fp32).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Rng:
+    """Deterministic rng stream: each draw folds a fresh counter into root."""
+
+    def __init__(self, key):
+        self.key = key
+        self.n = 0
+
+    def next(self):
+        self.n += 1
+        return jax.random.fold_in(self.key, self.n)
+
+
+def normal(rng: Rng, shape, dtype, scale: float):
+    return (scale * jax.random.truncated_normal(
+        rng.next(), -2.0, 2.0, shape, jnp.float32)).astype(dtype)
+
+
+def linear_init(rng: Rng, d_in: int, d_out: int, *, bias: bool = False,
+                dtype=jnp.float32, scale: float | None = None):
+    scale = scale if scale is not None else d_in ** -0.5
+    p = {"w": normal(rng, (d_in, d_out), dtype, scale)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p, x):
+    # compute dtype follows the activations (set once at the embedding);
+    # params are cast at use so they can be stored in fp32.
+    y = jnp.einsum("...d,df->...f", x, p["w"].astype(x.dtype))
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def embedding_init(rng: Rng, vocab: int, d: int, dtype=jnp.float32):
+    # d^-0.5 scale keeps tied-head logits O(1) (inputs are re-scaled by
+    # sqrt(d) at lookup time).
+    return {"table": normal(rng, (vocab, d), dtype, d ** -0.5)}
+
+
+# ------------------------------------------------------------------- rotary
+def rope_angles(positions, dim: int, theta: float):
+    """positions: (...,) int32 -> (cos, sin) of shape (..., dim//2), fp32."""
+    half = dim // 2
+    freqs = 1.0 / (theta ** (np.arange(0, half) * 2.0 / dim))
+    ang = positions.astype(jnp.float32)[..., None] * freqs[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (..., dim); cos/sin broadcastable to (..., dim//2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1).astype(x.dtype)
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]

@@ -1,0 +1,234 @@
+"""Mamba2 block via the SSD (state-space duality) chunked algorithm
+[arXiv:2405.21060], pure JAX.
+
+Training/prefill runs the chunked SSD decomposition: quadratic attention-like
+compute *within* chunks (MXU-friendly matmuls) + a linear inter-chunk state
+recurrence (lax.scan over n_chunks steps). Decode is the O(1) recurrent state
+update. Both paths share parameters; decode state is (conv cache, SSM state).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .modules import linear, linear_init, rmsnorm, rmsnorm_init, Rng, normal
+
+
+def mamba2_init(rng: Rng, cfg, dtype):
+    d = cfg.d_model
+    di = cfg.d_inner
+    h = cfg.ssm_heads
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    p = {
+        "A_log": jnp.zeros((h,), dtype),          # A = -exp(A_log) in (-1, 0]
+        "D": jnp.ones((h,), dtype),
+        "dt_bias": jnp.zeros((h,), dtype),
+        "norm": rmsnorm_init(di, dtype),
+        "out_proj": linear_init(rng, di, d, dtype=dtype,
+                                scale=di ** -0.5 / (2 * cfg.num_layers) ** 0.5),
+    }
+    if getattr(cfg, "ssm_split_proj", False):
+        # separate projections: every weight TP-shards cleanly, no sliced
+        # sharded dims (EXPERIMENTS.md §Perf hillclimb B)
+        p.update({
+            "z_proj": linear_init(rng, d, di, dtype=dtype),
+            "x_proj": linear_init(rng, d, di, dtype=dtype),
+            "b_proj": linear_init(rng, d, g * n, dtype=dtype),
+            "c_proj": linear_init(rng, d, g * n, dtype=dtype),
+            "dt_proj": linear_init(rng, d, h, dtype=dtype),
+            "conv_wx": normal(rng, (cfg.conv_width, di), dtype,
+                              cfg.conv_width ** -0.5),
+            "conv_bx": jnp.zeros((di,), dtype),
+            "conv_wb": normal(rng, (cfg.conv_width, g * n), dtype,
+                              cfg.conv_width ** -0.5),
+            "conv_bb": jnp.zeros((g * n,), dtype),
+            "conv_wc": normal(rng, (cfg.conv_width, g * n), dtype,
+                              cfg.conv_width ** -0.5),
+            "conv_bc": jnp.zeros((g * n,), dtype),
+        })
+    else:
+        # fused in_proj -> [z (di), x (di), B (g*n), C (g*n), dt (h)]
+        d_in_proj = 2 * di + 2 * g * n + h
+        p.update({
+            "in_proj": linear_init(rng, d, d_in_proj, dtype=dtype),
+            "conv_w": normal(rng, (cfg.conv_width, di + 2 * g * n), dtype,
+                             cfg.conv_width ** -0.5),
+            "conv_b": jnp.zeros((di + 2 * g * n,), dtype),
+        })
+    return p
+
+
+def _split_proj(cfg, zxbcdt):
+    di, g, n, h = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * g * n]
+    dt = zxbcdt[..., -h:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv1d. xbc: (B,S,C); w: (W,C)."""
+    width = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc, dtype=jnp.float32)
+    for i in range(width):
+        out = out + pad[:, i:i + xbc.shape[1]].astype(jnp.float32) * \
+            w[i].astype(jnp.float32)
+    return jax.nn.silu(out + b.astype(jnp.float32)).astype(xbc.dtype)
+
+
+def _projections(p, cfg, u):
+    """(z, x, B, C, dt) with causal conv applied; fused or split weights."""
+    di, g, n = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state
+    if "in_proj" in p:
+        z, xbc, dt = _split_proj(cfg, linear(p["in_proj"], u))
+        xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+        return (z, xbc[..., :di], xbc[..., di:di + g * n],
+                xbc[..., di + g * n:], dt)
+    z = linear(p["z_proj"], u)
+    dt = linear(p["dt_proj"], u)
+    x = _causal_conv(linear(p["x_proj"], u), p["conv_wx"], p["conv_bx"])
+    bm = _causal_conv(linear(p["b_proj"], u), p["conv_wb"], p["conv_bb"])
+    cm = _causal_conv(linear(p["c_proj"], u), p["conv_wc"], p["conv_bc"])
+    return z, x, bm, cm, dt
+
+
+def mamba2_apply(p, cfg, u):
+    """Train/prefill. u: (B,S,D) -> (B,S,D) via chunked SSD."""
+    b, s, _ = u.shape
+    di, g, n, h = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    hd = cfg.ssm_head_dim
+    q = min(cfg.ssd_chunk, s)
+    assert s % q == 0, (s, q)
+    nc = s // q
+
+    z, x, bmat, cmat, dt = _projections(p, cfg, u)
+    x = x.reshape(b, s, h, hd)
+    bmat = bmat.reshape(b, s, g, n)
+    cmat = cmat.reshape(b, s, g, n)
+    # broadcast groups to heads
+    rep = h // g
+    bmat = jnp.repeat(bmat, rep, axis=2)                     # (B,S,H,N)
+    cmat = jnp.repeat(cmat, rep, axis=2)
+    # SSD head parallelism: shard the head dim over `model` so the O(q^2)
+    # intra-chunk tensors shard with it (TPU adaptation; DESIGN.md §4)
+    from repro.dist.context import constrain
+    x = constrain(x, "dp", None, "tp", None)
+    bmat = constrain(bmat, "dp", None, "tp", None)
+    cmat = constrain(cmat, "dp", None, "tp", None)
+    dt = constrain(dt, "dp", None, "tp")
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # (B,S,H)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))              # (H,)
+    da = dt * a[None, None, :]                                # (B,S,H) decay log
+
+    # chunk reshape; B/C in fp32 by default, bf16 under cfg.ssd_bf16
+    ssd_dt = u.dtype if getattr(cfg, "ssd_bf16", False) else jnp.float32
+    xq = x.reshape(b, nc, q, h, hd)
+    bq = bmat.reshape(b, nc, q, h, n).astype(ssd_dt)
+    cq = cmat.reshape(b, nc, q, h, n).astype(ssd_dt)
+    dtq = dt.reshape(b, nc, q, h)
+    daq = da.reshape(b, nc, q, h)
+    da_cs = jnp.cumsum(daq, axis=2)                           # within-chunk cumsum
+    da_tot = da_cs[:, :, -1]                                  # (B,nc,H)
+
+    # --- intra-chunk (quadratic within chunk, like masked attention) --------
+    # L[b,c,h,i,j] = exp(da_cs_i - da_cs_j) * dt_j   for j <= i
+    diff = da_cs[:, :, :, None, :] - da_cs[:, :, None, :, :]  # (B,nc,i,j,H)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    decay = jnp.where(mask[None, None, :, :, None], jnp.exp(diff), 0.0)
+    scores = jnp.einsum("bcihn,bcjhn->bcijh", cq, bq).astype(jnp.float32) \
+        * decay * dtq[:, :, None, :, :]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores.astype(u.dtype), xq)
+
+    # --- chunk states + inter-chunk recurrence ------------------------------
+    # state contribution of chunk c: sum_j exp(da_tot - da_cs_j) dt_j B_j x_j
+    w = jnp.exp(da_tot[:, :, None, :] - da_cs) * dtq          # (B,nc,q,H)
+    states = jnp.einsum("bcjhn,bcjh,bcjhp->bchnp",
+                        bq.astype(jnp.float32), w,
+                        xq.astype(jnp.float32))               # (B,nc,H,N,P)
+
+    def scan_fn(s_prev, xs):
+        st, tot = xs                                          # (B,H,N,P),(B,H)
+        s_new = s_prev * jnp.exp(tot)[..., None, None] + st
+        return s_new, s_prev                                  # emit state BEFORE chunk
+
+    s0 = jnp.zeros((b, h, n, hd), jnp.float32)
+    _, prev_states = jax.lax.scan(
+        scan_fn, s0, (states.swapaxes(0, 1), da_tot.swapaxes(0, 1)),
+        unroll=getattr(cfg, "unroll_layers", False))
+    prev_states = prev_states.swapaxes(0, 1)                  # (B,nc,H,N,P)
+
+    # y_inter[i] = C_i . S_prev * exp(da_cs_i)
+    y_inter = jnp.einsum("bcihn,bchnp->bcihp",
+                         cq.astype(jnp.float32) * jnp.exp(da_cs)[..., None],
+                         prev_states).astype(u.dtype)
+
+    y = (y_intra + y_inter).reshape(b, s, h, hd)
+    y = y + x * p["D"].astype(u.dtype)[None, None, :, None]
+    y = y.reshape(b, s, di)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z.astype(jnp.float32)).astype(u.dtype),
+                cfg.norm_eps)
+    return linear(p["out_proj"], y)
+
+
+def mamba2_decode_init(cfg, batch, dtype=jnp.float32):
+    di, g, n = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state
+    h, hd = cfg.ssm_heads, cfg.ssm_head_dim
+    conv_c = di + 2 * g * n
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_c), dtype),
+        "ssm": jnp.zeros((batch, h, n, hd), jnp.float32),
+    }
+
+
+def mamba2_decode(p, cfg, u, state):
+    """One-token decode. u: (B,1,D); state: dict(conv, ssm). O(1) per token."""
+    b = u.shape[0]
+    di, g, n, h = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    hd = cfg.ssm_head_dim
+
+    if "in_proj" in p:
+        zxbcdt = linear(p["in_proj"], u)
+        conv_w_full, conv_b_full = p["conv_w"], p["conv_b"]
+    else:   # split projections: materialize the fused layout for the cache
+        zxbcdt = jnp.concatenate(
+            [linear(p["z_proj"], u), linear(p["x_proj"], u),
+             linear(p["b_proj"], u), linear(p["c_proj"], u),
+             linear(p["dt_proj"], u)], axis=-1)
+        conv_w_full = jnp.concatenate(
+            [p["conv_wx"], p["conv_wb"], p["conv_wc"]], axis=1)
+        conv_b_full = jnp.concatenate(
+            [p["conv_bx"], p["conv_bb"], p["conv_bc"]])
+    z, xbc, dt = _split_proj(cfg, zxbcdt)                     # (B,1,*)
+    # rolling conv cache
+    conv_in = jnp.concatenate([state["conv"],
+                               xbc.astype(state["conv"].dtype)], axis=1)
+    new_conv = conv_in[:, 1:]
+    w = conv_w_full.astype(jnp.float32)
+    acc = (conv_in.astype(jnp.float32) * w[None]).sum(axis=1) \
+        + conv_b_full.astype(jnp.float32)
+    xbc1 = jax.nn.silu(acc).astype(u.dtype)                    # (B,C)
+
+    x = xbc1[:, :di].reshape(b, h, hd)
+    bvec = xbc1[:, di:di + g * n].reshape(b, g, n)
+    cvec = xbc1[:, di + g * n:].reshape(b, g, n)
+    rep = h // g
+    bvec = jnp.repeat(bvec, rep, axis=1).astype(jnp.float32)  # (B,H,N)
+    cvec = jnp.repeat(cvec, rep, axis=1).astype(jnp.float32)
+
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                          + p["dt_bias"].astype(jnp.float32))  # (B,H)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt1 * a[None])                             # (B,H)
+
+    ssm = state["ssm"] * decay[..., None, None] + jnp.einsum(
+        "bhn,bh,bhp->bhnp", bvec, dt1, x.astype(jnp.float32))
+    y = jnp.einsum("bhn,bhnp->bhp", cvec, ssm).astype(u.dtype)
+    y = y + x * p["D"].astype(u.dtype)[None, :, None]
+    y = y.reshape(b, 1, di)
+    y = rmsnorm(p["norm"],
+                y * jax.nn.silu(z.astype(jnp.float32)).astype(u.dtype),
+                cfg.norm_eps)
+    return linear(p["out_proj"], y), {"conv": new_conv, "ssm": ssm}

@@ -1,0 +1,475 @@
+"""Decoder-LM spine for dense / MoE / SSM / hybrid families.
+
+Layers run under ``lax.scan`` over stacked parameters with ``jax.checkpoint``
+(remat) around the body, so the lowered HLO is O(1) in depth — essential both
+for 512-device dry-run compiles and for real-TPU compile times at 40-60 layers.
+
+Families:
+  dense  — [attn, mlp] x L                     (stablelm, qwen, minicpm, danube,
+                                                internvl2 backbone)
+  moe    — [attn, moe] x L (+ leading dense)   (dbrx, deepseek-v2/MLA)
+  ssm    — [mamba2] x L                        (mamba2-370m)
+  hybrid — mamba2 spine + one SHARED attention block applied every k layers
+           with per-site LoRA                  (zamba2)
+
+The token embedding uses ``repro.core.embedding_lookup`` — the paper's
+sort+segment conflict resolution on the embedding-gradient MTTKRP
+(cfg.embed_grad selects it; DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.embed_grad import embedding_lookup
+
+from . import attention as attn
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .modules import (Rng, dtype_of, embedding_init, linear, linear_init,
+                      normal, rmsnorm, rmsnorm_init)
+
+
+# ------------------------------------------------------------------------ MLP
+def mlp_init(rng: Rng, cfg, dtype, d_ff: int):
+    d = cfg.d_model
+    scale_out = d_ff ** -0.5 / (2 * max(1, cfg.num_layers)) ** 0.5
+    if cfg.mlp_type == "swiglu":
+        return {"wi": linear_init(rng, d, d_ff, dtype=dtype),
+                "wg": linear_init(rng, d, d_ff, dtype=dtype),
+                "wo": linear_init(rng, d_ff, d, dtype=dtype, scale=scale_out)}
+    return {"wi": linear_init(rng, d, d_ff, dtype=dtype),
+            "wo": linear_init(rng, d_ff, d, dtype=dtype, scale=scale_out)}
+
+
+def mlp_apply(p, cfg, x):
+    from repro.dist.context import constrain
+    if cfg.mlp_type == "swiglu":
+        h = jax.nn.silu(linear(p["wg"], x)) * linear(p["wi"], x)
+    else:
+        h = jax.nn.gelu(linear(p["wi"], x))
+    h = constrain(h, "dp", None, "tp")     # ff-sharded hidden anchor
+    return linear(p["wo"], h)
+
+
+# ------------------------------------------------------------------- layers
+def _attn_init(rng, cfg, dtype):
+    return attn.mla_init(rng, cfg, dtype) if cfg.attention == "mla" \
+        else attn.gqa_init(rng, cfg, dtype)
+
+
+def dense_layer_init(rng: Rng, cfg, dtype, *, use_moe: bool):
+    p = {"ln1": rmsnorm_init(cfg.d_model, dtype),
+         "attn": _attn_init(rng, cfg, dtype),
+         "ln2": rmsnorm_init(cfg.d_model, dtype)}
+    if use_moe:
+        p["moe"] = moe_mod.moe_init(rng, cfg, dtype)
+    else:
+        p["mlp"] = mlp_init(rng, cfg, dtype, cfg.d_ff)
+    return p
+
+
+def dense_layer_apply(p, cfg, x, positions, *, impl):
+    from repro.dist.context import constrain
+    x = constrain(x, "dp", None, None)     # residual-stream anchor
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if cfg.attention == "mla":
+        h = attn.mla_apply(p["attn"], cfg, h, positions=positions, impl=impl)
+    else:
+        h = attn.gqa_apply(p["attn"], cfg, h, positions=positions, impl=impl)
+    x = x + h
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if "moe" in p:
+        from repro.dist import context as dist_context
+        mesh = dist_context.get_mesh()
+        if mesh is not None and "model" in mesh.axis_names:
+            h, aux = moe_mod.moe_apply_sharded(p["moe"], cfg, h, mesh)
+        else:
+            h, aux = moe_mod.moe_apply(p["moe"], cfg, h)
+    else:
+        h, aux = mlp_apply(p["mlp"], cfg, h), jnp.zeros((), jnp.float32)
+    return x + h, aux
+
+
+def ssm_layer_init(rng: Rng, cfg, dtype):
+    return {"ln": rmsnorm_init(cfg.d_model, dtype),
+            "mamba": ssm_mod.mamba2_init(rng, cfg, dtype)}
+
+
+def ssm_layer_apply(p, cfg, x):
+    return x + ssm_mod.mamba2_apply(p["mamba"], cfg,
+                                    rmsnorm(p["ln"], x, cfg.norm_eps))
+
+
+# ------------------------------------------------------ hybrid (zamba2-like)
+def _lora_init(rng: Rng, d_in, d_out, rank, dtype):
+    return {"a": normal(rng, (d_in, rank), dtype, d_in ** -0.5),
+            "b": jnp.zeros((rank, d_out), dtype)}
+
+
+def _lora_apply(p, x):
+    return jnp.einsum("...r,rf->...f",
+                      jnp.einsum("...d,dr->...r", x, p["a"].astype(x.dtype)),
+                      p["b"].astype(x.dtype))
+
+
+def shared_attn_init(rng: Rng, cfg, dtype):
+    """The one shared transformer block of zamba2 (attn + mlp)."""
+    return {"ln1": rmsnorm_init(cfg.d_model, dtype),
+            "attn": attn.gqa_init(rng, cfg, dtype),
+            "ln2": rmsnorm_init(cfg.d_model, dtype),
+            "mlp": mlp_init(rng, cfg, dtype, cfg.d_ff)}
+
+
+def site_lora_init(rng: Rng, cfg, dtype):
+    h, kv, hd, d, r = (cfg.num_heads, cfg.num_kv_heads, cfg.head_dim,
+                       cfg.d_model, cfg.shared_attn_lora_rank)
+    return {"q": _lora_init(rng, d, h * hd, r, dtype),
+            "k": _lora_init(rng, d, kv * hd, r, dtype),
+            "v": _lora_init(rng, d, kv * hd, r, dtype)}
+
+
+def shared_attn_apply(shared, lora, cfg, x, positions, *, impl):
+    """Shared block with per-site LoRA deltas on q/k/v projections."""
+    h = rmsnorm(shared["ln1"], x, cfg.norm_eps)
+    p = shared["attn"]
+    nh, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    b, s, _ = h.shape
+    q = (linear(p["wq"], h) + _lora_apply(lora["q"], h)).reshape(b, s, nh, hd)
+    k = (linear(p["wk"], h) + _lora_apply(lora["k"], h)).reshape(b, s, kvh, hd)
+    v = (linear(p["wv"], h) + _lora_apply(lora["v"], h)).reshape(b, s, kvh, hd)
+    cos, sin = attn.rope_angles(positions, hd, cfg.rope_theta)
+    q = attn.apply_rope(q, cos[None, :, None], sin[None, :, None])
+    k = attn.apply_rope(k, cos[None, :, None], sin[None, :, None])
+    q = q.reshape(b, s, kvh, nh // kvh, hd)
+    q, k, v = attn._attn_constrain(q, k, v)
+    if impl == "chunked":
+        out = attn._chunked_attn(q, k, v, offset=0, window=None, unroll=cfg.unroll_layers)
+    else:
+        out = attn._full_attn(q, k, v, attn._causal_mask(s, s, 0, None))
+    x = x + linear(p["wo"], out.reshape(b, s, nh * hd))
+    h2 = rmsnorm(shared["ln2"], x, cfg.norm_eps)
+    return x + mlp_apply(shared["mlp"], cfg, h2)
+
+
+# ----------------------------------------------------------------- the model
+def hybrid_group_counts(cfg) -> tuple[int, int, int]:
+    """(pre_layers, groups, layers_per_group) covering cfg.num_layers."""
+    k = cfg.shared_attn_every
+    groups = cfg.num_layers // k
+    pre = cfg.num_layers - groups * k
+    return pre, groups, k
+
+
+def init_params(cfg, key):
+    """Full parameter pytree (run under jax.eval_shape for the dry-run)."""
+    dtype = dtype_of(cfg.param_dtype)
+    rng = Rng(key)
+    p: dict[str, Any] = {"embed": embedding_init(rng, cfg.padded_vocab,
+                                                 cfg.d_model, dtype)}
+    if cfg.input_mode == "embeddings":
+        fd = cfg.frontend_dim or cfg.d_model
+        p["frontend_proj"] = linear_init(rng, fd, cfg.d_model, dtype=dtype)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        n_moe = cfg.num_layers - cfg.first_dense_layers if cfg.moe else 0
+        n_dense = cfg.num_layers - n_moe
+        if n_dense:
+            keys = jax.random.split(rng.next(), n_dense)
+            p["dense_layers"] = jax.vmap(
+                lambda k: dense_layer_init(Rng(k), cfg, dtype, use_moe=False)
+            )(keys)
+        if n_moe:
+            keys = jax.random.split(rng.next(), n_moe)
+            p["moe_layers"] = jax.vmap(
+                lambda k: dense_layer_init(Rng(k), cfg, dtype, use_moe=True)
+            )(keys)
+    elif cfg.family == "ssm":
+        keys = jax.random.split(rng.next(), cfg.num_layers)
+        p["ssm_layers"] = jax.vmap(
+            lambda k: ssm_layer_init(Rng(k), cfg, dtype))(keys)
+    elif cfg.family == "hybrid":
+        pre, groups, per = hybrid_group_counts(cfg)
+        if pre:
+            keys = jax.random.split(rng.next(), pre)
+            p["pre_layers"] = jax.vmap(
+                lambda k: ssm_layer_init(Rng(k), cfg, dtype))(keys)
+        gkeys = jax.random.split(rng.next(), groups * per).reshape(groups, per)
+        p["group_layers"] = jax.vmap(jax.vmap(
+            lambda k: ssm_layer_init(Rng(k), cfg, dtype)))(gkeys)
+        p["shared_attn"] = shared_attn_init(rng, cfg, dtype)
+        lkeys = jax.random.split(rng.next(), groups)
+        p["site_lora"] = jax.vmap(
+            lambda k: site_lora_init(Rng(k), cfg, dtype))(lkeys)
+    else:
+        raise ValueError(cfg.family)
+
+    p["ln_f"] = rmsnorm_init(cfg.d_model, dtype)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = linear_init(rng, cfg.d_model, cfg.padded_vocab,
+                                   dtype=dtype)
+    return p
+
+
+def _remat(fn, cfg):
+    policy = {"nothing_saveable": jax.checkpoint_policies.nothing_saveable,
+              "dots_saveable": jax.checkpoint_policies.dots_saveable,
+              "dots_with_no_batch_dims_saveable":
+                  jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+              }[cfg.remat_policy]
+    return jax.checkpoint(fn, policy=policy)
+
+
+def _embed_in(p, cfg, batch, compute_dtype):
+    if cfg.input_mode == "embeddings":
+        x = linear(p["frontend_proj"], batch["embeds"].astype(compute_dtype))
+    else:
+        x = embedding_lookup(p["embed"]["table"], batch["tokens"],
+                             cfg.embed_grad).astype(compute_dtype)
+        x = x * (cfg.d_model ** 0.5)
+    return x
+
+
+def forward(params, cfg, batch, *, impl: str | None = None):
+    """batch: {"tokens": (B,S)} or {"embeds": (B,S,Fd)}. Returns (logits, aux)."""
+    cd = dtype_of(cfg.compute_dtype)
+    x = _embed_in(params, cfg, batch, cd)
+    s = x.shape[1]
+    if impl is None:
+        impl = "chunked" if s > 8192 else "full"
+    positions = jnp.arange(s, dtype=jnp.int32)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        def body(h, lp):
+            h, aux = dense_layer_apply(lp, cfg, h, positions, impl=impl)
+            return h, aux
+        if "dense_layers" in params:
+            x, aux = jax.lax.scan(_remat(body, cfg), x, params["dense_layers"], unroll=cfg.unroll_layers)
+            aux_total += aux.sum()
+        if "moe_layers" in params:
+            x, aux = jax.lax.scan(_remat(body, cfg), x, params["moe_layers"], unroll=cfg.unroll_layers)
+            aux_total += aux.sum()
+    elif cfg.family == "ssm":
+        def body(h, lp):
+            return ssm_layer_apply(lp, cfg, h), None
+        x, _ = jax.lax.scan(_remat(body, cfg), x, params["ssm_layers"], unroll=cfg.unroll_layers)
+    elif cfg.family == "hybrid":
+        def body(h, lp):
+            return ssm_layer_apply(lp, cfg, h), None
+        if "pre_layers" in params:
+            x, _ = jax.lax.scan(_remat(body, cfg), x, params["pre_layers"], unroll=cfg.unroll_layers)
+
+        def group_body(h, xs):
+            glayers, lora = xs
+            h, _ = jax.lax.scan(_remat(body, cfg), h, glayers, unroll=cfg.unroll_layers)
+            h = shared_attn_apply(params["shared_attn"], lora, cfg, h,
+                                  positions, impl=impl)
+            return h, None
+        x, _ = jax.lax.scan(_remat(group_body, cfg), x,
+                            (params["group_layers"], params["site_lora"]),
+                            unroll=cfg.unroll_layers)
+    else:
+        raise ValueError(cfg.family)
+
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x,
+                            params["embed"]["table"].astype(x.dtype))
+    else:
+        logits = linear(params["lm_head"], x)
+    logits = logits.astype(jnp.float32)
+    from repro.dist.context import constrain
+    logits = constrain(logits, "dp", None, "tp")   # keep vocab sharded
+    return logits, aux_total
+
+
+def parallel_cross_entropy(logits, labels):
+    """CE over a vocab-SHARDED logits tensor (Megatron-style parallel CE).
+
+    No take_along_axis: a gather over the sharded vocab dim forces a
+    full-logits all-gather (26 GB/device fp32 at train_4k shapes — see
+    EXPERIMENTS.md §Perf iteration B1). With reductions only, every vocab
+    contraction stays local + one tiny (B,S) all-reduce from GSPMD.
+    """
+    from repro.dist.context import constrain
+    lse = jax.nn.logsumexp(logits, axis=-1)                     # (B,S)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                          logits.ndim - 1)
+    vocab_iota = constrain(vocab_iota, "dp", None, "tp")        # shard w/ logits
+    picked = jnp.sum(jnp.where(vocab_iota == labels[..., None], logits, 0.0),
+                     axis=-1)                                    # (B,S)
+    return lse - picked
+
+
+def loss_fn(params, cfg, batch):
+    """Next-token CE + MoE aux loss. batch needs "labels": (B,S) int32."""
+    logits, aux = forward(params, cfg, batch)
+    nll = parallel_cross_entropy(logits, batch["labels"])
+    loss = nll.mean() + 0.01 * aux
+    return loss, {"nll": nll.mean(), "aux": aux}
+
+
+# ------------------------------------------------------------------- decode
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Decode cache pytree (abstract-able with jax.eval_shape)."""
+    if cfg.family in ("dense", "moe", "vlm"):
+        L = cfg.num_layers
+        if cfg.attention == "mla":
+            return {"ckv": jnp.zeros((L, batch, max_len, cfg.kv_lora_rank), dtype),
+                    "kr": jnp.zeros((L, batch, max_len, cfg.rope_head_dim), dtype)}
+        return {"k": jnp.zeros((L, batch, max_len, cfg.num_kv_heads,
+                                cfg.head_dim), dtype),
+                "v": jnp.zeros((L, batch, max_len, cfg.num_kv_heads,
+                                cfg.head_dim), dtype)}
+    if cfg.family == "ssm":
+        st = ssm_mod.mamba2_decode_init(cfg, batch)
+        return {"ssm": jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.num_layers,) + a.shape), st)}
+    if cfg.family == "hybrid":
+        pre, groups, per = hybrid_group_counts(cfg)
+        st = ssm_mod.mamba2_decode_init(cfg, batch)
+        cache = {
+            "pre": jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (pre,) + a.shape), st) if pre else {},
+            "groups": jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (groups, per) + a.shape), st),
+            "attn_k": jnp.zeros((groups, batch, max_len, cfg.num_kv_heads,
+                                 cfg.head_dim), dtype),
+            "attn_v": jnp.zeros((groups, batch, max_len, cfg.num_kv_heads,
+                                 cfg.head_dim), dtype),
+        }
+        return cache
+    raise ValueError(cfg.family)
+
+
+def decode_step(params, cfg, cache, tokens, pos):
+    """One decode step. tokens: (B,1) int32 (or embeds (B,1,Fd)); pos: scalar
+    int32 current position. Returns (logits (B,1,V), new cache)."""
+    cd = dtype_of(cfg.compute_dtype)
+    batch = {"tokens": tokens} if cfg.input_mode == "tokens" \
+        else {"embeds": tokens}
+    x = _embed_in(params, cfg, batch, cd)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        def body(h, xs):
+            if cfg.attention == "mla":
+                lp, ckv, kr = xs
+                hh = rmsnorm(lp["ln1"], h, cfg.norm_eps)
+                a, ckv, kr = attn.mla_decode(lp["attn"], cfg, hh, ckv, kr, pos)
+                new = (ckv, kr)
+            else:
+                lp, ck, cv = xs
+                hh = rmsnorm(lp["ln1"], h, cfg.norm_eps)
+                a, ck, cv = attn.gqa_decode(lp["attn"], cfg, hh, ck, cv, pos)
+                new = (ck, cv)
+            h = h + a
+            hh = rmsnorm(lp["ln2"], h, cfg.norm_eps)
+            if "moe" in lp:
+                from repro.dist import context as dist_context
+                mesh = dist_context.get_mesh()
+                if mesh is not None and "model" in mesh.axis_names:
+                    m, _ = moe_mod.moe_apply_sharded(lp["moe"], cfg, hh, mesh)
+                else:
+                    m, _ = moe_mod.moe_apply(lp["moe"], cfg, hh)
+            else:
+                m = mlp_apply(lp["mlp"], cfg, hh)
+            return h + m, new
+
+        new_cache = dict(cache)
+        off = 0
+        for group in ("dense_layers", "moe_layers"):
+            if group not in params:
+                continue
+            n = jax.tree.leaves(params[group])[0].shape[0]
+            if cfg.attention == "mla":
+                xs = (params[group], cache["ckv"][off:off + n],
+                      cache["kr"][off:off + n])
+            else:
+                xs = (params[group], cache["k"][off:off + n],
+                      cache["v"][off:off + n])
+            x, ys = jax.lax.scan(body, x, xs, unroll=cfg.unroll_layers)
+            if cfg.attention == "mla":
+                new_cache["ckv"] = new_cache["ckv"].at[off:off + n].set(ys[0])
+                new_cache["kr"] = new_cache["kr"].at[off:off + n].set(ys[1])
+            else:
+                new_cache["k"] = new_cache["k"].at[off:off + n].set(ys[0])
+                new_cache["v"] = new_cache["v"].at[off:off + n].set(ys[1])
+            off += n
+        cache = new_cache
+
+    elif cfg.family == "ssm":
+        def body(h, xs):
+            lp, st = xs
+            y, st = ssm_mod.mamba2_decode(
+                lp["mamba"], cfg, rmsnorm(lp["ln"], h, cfg.norm_eps), st)
+            return h + y, st
+        x, new_st = jax.lax.scan(body, x, (params["ssm_layers"], cache["ssm"]), unroll=cfg.unroll_layers)
+        cache = {"ssm": new_st}
+
+    elif cfg.family == "hybrid":
+        def body(h, xs):
+            lp, st = xs
+            y, st = ssm_mod.mamba2_decode(
+                lp["mamba"], cfg, rmsnorm(lp["ln"], h, cfg.norm_eps), st)
+            return h + y, st
+
+        new_cache = dict(cache)
+        if "pre_layers" in params:
+            x, st = jax.lax.scan(body, x, (params["pre_layers"], cache["pre"]), unroll=cfg.unroll_layers)
+            new_cache["pre"] = st
+
+        def group_body(h, xs):
+            glayers, lora, gst, ck, cv = xs
+            h, gst = jax.lax.scan(body, h, (glayers, gst), unroll=cfg.unroll_layers)
+            hh = rmsnorm(params["shared_attn"]["ln1"], h, cfg.norm_eps)
+            sp = dict(params["shared_attn"]["attn"])
+            # fold LoRA deltas into the shared projections for this site
+            b_, _, _ = hh.shape
+            nh, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+            q = (linear(sp["wq"], hh) + _lora_apply(lora["q"], hh))
+            k = (linear(sp["wk"], hh) + _lora_apply(lora["k"], hh))
+            v = (linear(sp["wv"], hh) + _lora_apply(lora["v"], hh))
+            q = q.reshape(b_, 1, nh, hd)
+            k = k.reshape(b_, 1, kvh, hd)
+            v = v.reshape(b_, 1, kvh, hd)
+            cos, sin = attn.rope_angles(jnp.asarray(pos)[None], hd,
+                                        cfg.rope_theta)
+            q = attn.apply_rope(q, cos[None, :, None], sin[None, :, None])
+            k = attn.apply_rope(k, cos[None, :, None], sin[None, :, None])
+            ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype),
+                                                     pos, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype),
+                                                     pos, axis=1)
+            s_ = ck.shape[1]
+            q5 = q.reshape(b_, 1, kvh, nh // kvh, hd)
+            scores = jnp.einsum("bqkgh,bskh->bkgqs", q5, ck).astype(jnp.float32)
+            scores = scores * (hd ** -0.5)
+            valid = jnp.arange(s_)[None, None, None, None, :] <= pos
+            scores = jnp.where(valid, scores, attn.NEG_INF)
+            probs = jax.nn.softmax(scores, axis=-1).astype(h.dtype)
+            o = jnp.einsum("bkgqs,bskh->bqkgh", probs, cv).reshape(b_, 1, nh * hd)
+            h = h + linear(sp["wo"], o)
+            hh = rmsnorm(params["shared_attn"]["ln2"], h, cfg.norm_eps)
+            h = h + mlp_apply(params["shared_attn"]["mlp"], cfg, hh)
+            return h, (gst, ck, cv)
+
+        x, ys = jax.lax.scan(group_body, x,
+                             (params["group_layers"], params["site_lora"],
+                              cache["groups"], cache["attn_k"],
+                              cache["attn_v"]), unroll=cfg.unroll_layers)
+        new_cache["groups"], new_cache["attn_k"], new_cache["attn_v"] = ys
+        cache = new_cache
+    else:
+        raise ValueError(cfg.family)
+
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x,
+                            params["embed"]["table"].astype(x.dtype))
+    else:
+        logits = linear(params["lm_head"], x)
+    return logits.astype(jnp.float32), cache

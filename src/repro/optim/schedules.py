@@ -1,0 +1,31 @@
+"""LR schedules: cosine (default) and WSD (warmup-stable-decay, MiniCPM)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine(step, *, peak_lr: float, warmup: int, total: int,
+           final_frac: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(1, warmup)
+    frac = jnp.clip((step - warmup) / jnp.maximum(1, total - warmup), 0, 1)
+    cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return jnp.where(step < warmup, warm, peak_lr * cos)
+
+
+def wsd(step, *, peak_lr: float, warmup: int, total: int,
+        decay_frac: float = 0.1, final_frac: float = 0.01):
+    """Warmup -> stable plateau -> sharp (exponential) decay over the last
+    ``decay_frac`` of training (MiniCPM, arXiv:2404.06395)."""
+    step = jnp.asarray(step, jnp.float32)
+    decay_steps = jnp.maximum(1, total * decay_frac)
+    decay_start = total - decay_steps
+    warm = peak_lr * step / jnp.maximum(1, warmup)
+    dec_t = jnp.clip((step - decay_start) / decay_steps, 0, 1)
+    dec = peak_lr * jnp.exp(jnp.log(final_frac) * dec_t)
+    return jnp.where(step < warmup, warm,
+                     jnp.where(step < decay_start, peak_lr, dec))
+
+
+def make_schedule(name: str, **kw):
+    return {"cosine": cosine, "wsd": wsd}[name], kw

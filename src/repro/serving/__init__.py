@@ -1,0 +1,2 @@
+from .decode import Server, ServeConfig
+__all__ = ["Server", "ServeConfig"]

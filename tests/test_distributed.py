@@ -1,0 +1,135 @@
+"""Distributed paths on 8 fake XLA devices (subprocess: device count must be
+set before jax initializes, and the main test session must keep 1 device)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(code: str, devices: int = 8):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        f" --xla_force_host_platform_device_count={devices}")
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    p = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, env=env, timeout=900)
+    assert p.returncode == 0, p.stderr[-4000:]
+    return p.stdout
+
+
+def test_distributed_mttkrp_matches_oracle():
+    out = _run("""
+        import numpy as np, jax
+        from jax.sharding import PartitionSpec as P
+        from repro import core
+        from repro.core.distributed import make_distributed_mttkrp
+        from repro.launch.mesh import make_test_mesh
+        mesh = make_test_mesh((4, 2), ("data", "model"))
+        t = core.random_tensor((64, 33, 17), 4000, seed=5, dist="powerlaw")
+        b = core.build_blco(t, target_bits=10, max_nnz_per_block=512)
+        rng = np.random.default_rng(0)
+        factors = [jax.device_put(
+            rng.standard_normal((d, 8)).astype(np.float32),
+            jax.NamedSharding(mesh, P(None, "model"))) for d in t.dims]
+        run = make_distributed_mttkrp(b, mesh)
+        for mode in range(3):
+            out = np.asarray(run(factors, mode))
+            oracle = core.mttkrp_dense_oracle(
+                t, [np.asarray(f) for f in factors], mode)
+            rel = np.max(np.abs(out - oracle)) / (np.max(np.abs(oracle)) + 1e-30)
+            assert rel < 1e-4, (mode, rel)
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_sharded_train_step_matches_single_device():
+    """The same train step on a 4x2 mesh and on 1 device must agree."""
+    out = _run("""
+        import dataclasses, numpy as np, jax, jax.numpy as jnp
+        from repro.configs import get_config
+        from repro.dist import context as dist_context
+        from repro.launch import steps
+        from repro.launch.mesh import make_test_mesh
+        from repro.models import build_model
+        from repro.optim import adamw
+
+        cfg = dataclasses.replace(get_config("dbrx_132b").reduced(),
+                                  compute_dtype="float32",
+                                  num_experts=8,   # divisible by model=2
+                                  capacity_factor=8.0)  # no drops: the
+        # sharded MoE applies capacity PER DATA SHARD (standard distributed
+        # semantics), so only the drop-free regime matches single-device
+        # exactly
+        opt_cfg = adamw.AdamWConfig(total_steps=10)
+        model = build_model(cfg)
+        params = model.init(jax.random.key(0))
+        state = {"params": params, "opt": adamw.init_state(params, opt_cfg)}
+        rng = np.random.default_rng(0)
+        batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 16))),
+                 "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 16)))}
+
+        ref_step = jax.jit(steps.make_train_step(cfg, opt_cfg))
+        ref_state, ref_metrics = ref_step(
+            jax.tree.map(jnp.copy, state), batch)
+
+        mesh = make_test_mesh((4, 2), ("data", "model"))
+        with mesh:
+            dist_context.set_mesh(mesh)
+            state_sds = jax.eval_shape(lambda s: s, state)
+            state_sh = steps.train_state_shardings(mesh, state_sds)
+            sh_state = jax.tree.map(jax.device_put, state, state_sh)
+            sh_step = jax.jit(steps.make_train_step(cfg, opt_cfg),
+                              in_shardings=(state_sh, None),
+                              out_shardings=(state_sh, None))
+            new_state, metrics = sh_step(sh_state, batch)
+            dist_context.set_mesh(None)
+
+        # fp32 reduction order differs across layouts (TP-sharded einsums,
+        # psum trees): semantic equivalence within fp32 reassociation noise
+        assert abs(float(metrics["loss"]) - float(ref_metrics["loss"])) < 5e-3, (
+            float(metrics["loss"]), float(ref_metrics["loss"]))
+        # parameters after one update agree across the two layouts
+        a = np.asarray(jax.device_get(
+            new_state["params"]["moe_layers"]["attn"]["wq"]["w"]))
+        b = np.asarray(jax.device_get(
+            ref_state["params"]["moe_layers"]["attn"]["wq"]["w"]))
+        np.testing.assert_allclose(a, b, rtol=5e-3, atol=5e-3)
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_elastic_reshard_roundtrip():
+    """Host snapshot -> different mesh -> values preserved (elastic restart)."""
+    out = _run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.configs import get_config
+        from repro.launch import steps
+        from repro.launch.mesh import make_test_mesh
+        from repro.models import build_model
+        from repro.optim import adamw
+        cfg = get_config("minicpm_2b").reduced()
+        model = build_model(cfg)
+        opt_cfg = adamw.AdamWConfig()
+        params = model.init(jax.random.key(0))
+        state = {"params": params, "opt": adamw.init_state(params, opt_cfg)}
+
+        m1 = make_test_mesh((4, 2), ("data", "model"))
+        m2 = make_test_mesh((2, 2), ("data", "model"))  # "failed" smaller fleet
+        sds = jax.eval_shape(lambda s: s, state)
+        sh1 = steps.train_state_shardings(m1, sds)
+        sh2 = steps.train_state_shardings(m2, sds)
+        on1 = jax.tree.map(jax.device_put, state, sh1)
+        host = jax.tree.map(np.asarray, on1)
+        on2 = jax.tree.map(jax.device_put, host, sh2)
+        x1 = np.asarray(jax.device_get(on1["params"]["embed"]["table"]))
+        x2 = np.asarray(jax.device_get(on2["params"]["embed"]["table"]))
+        np.testing.assert_array_equal(x1, x2)
+        print("OK")
+    """)
+    assert "OK" in out

@@ -1,0 +1,86 @@
+"""Every format's MTTKRP vs the dense oracle, on every mode."""
+import numpy as np
+import pytest
+
+from repro import core
+
+CASES = [
+    # (dims, nnz, dist, target_bits, max_nnz)
+    ((13, 7, 29, 5), 500, "powerlaw", 8, 64),      # forced blocking, 4-order
+    ((40, 25, 30), 2000, "powerlaw", 12, 512),     # forced blocking, 3-order
+    ((64, 33, 17), 1500, "uniform", 64, 1 << 20),  # single block path
+    ((128, 4, 256, 8, 3), 800, "clustered", 16, 128),  # 5-order
+    ((1000, 2, 5), 600, "powerlaw", 64, 1 << 20),  # long skewed mode
+]
+
+
+def _rel_err(a, oracle):
+    return np.max(np.abs(np.asarray(a, np.float64) - oracle)) / \
+        (np.max(np.abs(oracle)) + 1e-30)
+
+
+@pytest.mark.parametrize("dims,nnz,dist,tb,mx", CASES)
+def test_blco_all_modes_all_resolutions(dims, nnz, dist, tb, mx):
+    t = core.random_tensor(dims, nnz, seed=1, dist=dist)
+    b = core.build_blco(t, target_bits=tb, max_nnz_per_block=mx)
+    rng = np.random.default_rng(0)
+    factors = [rng.standard_normal((d, 8)).astype(np.float32) for d in dims]
+    for mode in range(len(dims)):
+        oracle = core.mttkrp_dense_oracle(t, factors, mode)
+        for res in ("register", "hierarchical", "auto"):
+            out = core.mttkrp(b, factors, mode, resolution=res)
+            assert _rel_err(out, oracle) < 5e-4, (mode, res)
+
+
+@pytest.mark.parametrize("dims,nnz,dist,tb,mx", CASES[:3])
+def test_baselines_all_modes(dims, nnz, dist, tb, mx):
+    t = core.random_tensor(dims, nnz, seed=2, dist=dist)
+    rng = np.random.default_rng(0)
+    factors = [rng.standard_normal((d, 16)).astype(np.float32) for d in dims]
+    coo = core.COOFormat.build(t)
+    fcoo = core.FCOOFormat.build(t)
+    csf = core.CSFFormat.build(t)
+    for mode in range(len(dims)):
+        oracle = core.mttkrp_dense_oracle(t, factors, mode)
+        assert _rel_err(core.coo_mttkrp(coo, factors, mode), oracle) < 5e-4
+        assert _rel_err(core.fcoo_mttkrp(fcoo, factors, mode), oracle) < 5e-4
+        assert _rel_err(core.csf_mttkrp(csf, factors, mode), oracle) < 5e-4
+        # non-root CSF traversal (the mode-specific asymmetry the paper cites)
+        other = (mode + 1) % len(dims)
+        assert _rel_err(core.csf_mttkrp(csf, factors, mode, root=other),
+                        oracle) < 5e-4
+
+
+def test_mode_agnostic_single_copy():
+    """The BLCO property the paper leads with: ONE tensor copy serves every
+    mode (baseline F-COO/CSF need N copies)."""
+    t = core.random_tensor((30, 40, 50), 2000, seed=3)
+    b = core.build_blco(t)
+    fcoo = core.FCOOFormat.build(t)
+    csf = core.CSFFormat.build(t)
+    blco_bytes = core.format_bytes(b)
+    assert len(fcoo.per_mode_indices) == t.order          # N copies
+    assert len(csf.trees) == t.order                      # N trees
+    assert fcoo.device_bytes() > 2.5 * blco_bytes
+    assert csf.device_bytes() > 2.5 * blco_bytes
+
+
+def test_heuristic_matches_paper_rule():
+    assert core.choose_resolution(16) == "hierarchical"   # short mode
+    assert core.choose_resolution(1 << 20) == "register"  # long mode
+
+
+def test_fp64_path():
+    import jax
+    if not jax.config.read("jax_enable_x64"):
+        pytest.skip("x64 disabled in this session")
+
+
+def test_empty_and_singleton_modes():
+    t = core.random_tensor((1, 17, 9), 100, seed=4)
+    b = core.build_blco(t)
+    rng = np.random.default_rng(0)
+    factors = [rng.standard_normal((d, 4)).astype(np.float32) for d in t.dims]
+    for mode in range(3):
+        oracle = core.mttkrp_dense_oracle(t, factors, mode)
+        assert _rel_err(core.mttkrp(b, factors, mode), oracle) < 5e-4

@@ -1,0 +1,36 @@
+"""u64-as-2xu32 arithmetic vs Python big ints (hypothesis)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import u64
+
+
+@settings(max_examples=60, deadline=None)
+@given(x=st.integers(0, 2**64 - 1),
+       shift=st.integers(0, 63), width=st.integers(1, 32))
+def test_extract_field(x, shift, width):
+    width = min(width, 64 - shift)
+    if width == 0:
+        return
+    hi, lo = u64.split64(np.array([x], np.uint64))
+    got = int(np.asarray(u64.extract_field(hi, lo, shift, width))[0])
+    assert got == (x >> shift) & ((1 << width) - 1)
+
+
+@settings(max_examples=40, deadline=None)
+@given(a=st.integers(0, 2**64 - 1), b=st.integers(0, 2**64 - 1))
+def test_neq_and_join(a, b):
+    ha, la = u64.split64(np.array([a], np.uint64))
+    hb, lb = u64.split64(np.array([b], np.uint64))
+    assert int(u64.join64(ha, la)[0]) == a
+    got = bool(np.asarray(u64.neq64(ha, la, hb, lb))[0])
+    assert got == (a != b)
+
+
+@settings(max_examples=40, deadline=None)
+@given(x=st.integers(0, 2**64 - 1), n=st.integers(0, 64))
+def test_shift_right(x, n):
+    hi, lo = u64.split64(np.array([x], np.uint64))
+    nh, nl = u64.shift_right(hi, lo, n)
+    got = int(u64.join64(np.asarray(nh, np.uint32), np.asarray(nl, np.uint32))[0])
+    assert got == (x >> n)

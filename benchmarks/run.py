@@ -207,6 +207,60 @@ def bench_embed_grad(rows):
         rows.append((f"embed.train_step.{method}", _time(run) * 1e6, ""))
 
 
+def bench_service(rows):
+    """Multi-tenant service throughput: jobs/sec at 1 vs 4 concurrent tenants.
+
+    Same total work (4 jobs, 2 distinct tensors, fixed iteration count) run
+    (a) sequentially through 4 single-job service instances and (b) through
+    one shared service — the shared run reuses cached BLCO builds and pooled
+    reservations, so its jobs/sec measures the serving layer's win.
+    """
+    from repro.service import (BuildParams, DecompositionService,
+                               SubmitDecomposition)
+    build = BuildParams(max_nnz_per_block=1 << 12)
+    tensors = [core.paper_like("uber-like", seed=0),
+               core.paper_like("chicago-like", seed=0)]
+    reqs = [SubmitDecomposition(tensor=tensors[i % 2], rank=16, iters=4,
+                                tol=0.0, seed=i, build=build)
+            for i in range(4)]
+
+    def run_sequential():
+        for req in reqs:
+            svc = DecompositionService(device_budget_bytes=8 << 20, queues=4)
+            svc.submit(req)
+            svc.run()
+
+    def run_shared():
+        svc = DecompositionService(device_budget_bytes=8 << 20, queues=4)
+        for req in reqs:
+            svc.submit(req)
+        svc.run()
+        return svc
+
+    # untimed warm-up so neither variant pays launch_mttkrp compilation
+    # (the jit cache is process-wide; without this the first-timed variant
+    # absorbs all compile time and the ratio is meaningless)
+    warm = DecompositionService(device_budget_bytes=8 << 20, queues=4)
+    for t in tensors:
+        warm.submit(SubmitDecomposition(tensor=t, rank=16, iters=1, tol=0.0,
+                                        seed=0, build=build))
+    warm.run()
+
+    t0 = time.perf_counter()
+    run_sequential()
+    seq_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    svc = run_shared()
+    shared_s = time.perf_counter() - t0
+    m = svc.service_metrics()
+    rows.append(("service.1_tenant_sequential", seq_s / len(reqs) * 1e6,
+                 f"{len(reqs)/seq_s:.3f}jobs/s"))
+    rows.append(("service.4_tenants_shared", shared_s / len(reqs) * 1e6,
+                 f"{len(reqs)/shared_s:.3f}jobs/s "
+                 f"({seq_s/shared_s:.2f}x, {m['blco_cache_hits']} cache hits, "
+                 f"peak_res={m['peak_admitted_reservation_bytes']/1e6:.2f}MB)"))
+
+
 def main() -> None:
     rows: list[tuple[str, float, str]] = []
     print("# BLCO paper benchmarks (CPU-scale analogues; see EXPERIMENTS.md)")
@@ -215,6 +269,7 @@ def main() -> None:
     bench_fig10(rows)
     bench_fig11_fig12(rows)
     bench_embed_grad(rows)
+    bench_service(rows)
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")

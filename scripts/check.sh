@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# Repo check: tier-1 tests + a multi-tenant service smoke run.
+#
+#   scripts/check.sh            # full tier-1 suite + service smoke
+#   scripts/check.sh --fast     # service/streaming/cp-als tests + smoke only
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ "${1:-}" == "--fast" ]]; then
+    python -m pytest -x -q tests/test_service.py tests/test_streaming.py \
+        tests/test_cp_als.py
+else
+    python -m pytest -x -q
+fi
+
+echo "== service smoke (examples/serve_td.py) =="
+python examples/serve_td.py
+
+echo "ALL CHECKS PASSED"

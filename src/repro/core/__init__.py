@@ -5,8 +5,9 @@ from .blco import BLCOTensor, build_blco, format_bytes
 from .mttkrp import mttkrp, choose_resolution, mttkrp_dense_oracle, khatri_rao
 from .baselines import (COOFormat, coo_mttkrp, FCOOFormat, fcoo_mttkrp,
                         CSFFormat, csf_mttkrp)
-from .cp_als import cp_als, CPResult, init_factors, reconstruct_dense
-from .streaming import OOMExecutor
+from .cp_als import (cp_als, cp_als_init, cp_als_step, CPResult, CPState,
+                     init_factors, reconstruct_dense)
+from .streaming import OOMExecutor, ReservationSpec, StreamStats
 from .embed_grad import embedding_lookup
 
 __all__ = [
@@ -15,6 +16,7 @@ __all__ = [
     "mttkrp", "choose_resolution", "mttkrp_dense_oracle", "khatri_rao",
     "COOFormat", "coo_mttkrp", "FCOOFormat", "fcoo_mttkrp",
     "CSFFormat", "csf_mttkrp",
-    "cp_als", "CPResult", "init_factors", "reconstruct_dense",
-    "OOMExecutor", "embedding_lookup",
+    "cp_als", "cp_als_init", "cp_als_step", "CPResult", "CPState",
+    "init_factors", "reconstruct_dense",
+    "OOMExecutor", "ReservationSpec", "StreamStats", "embedding_lookup",
 ]

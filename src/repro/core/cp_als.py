@@ -3,6 +3,15 @@
 The MTTKRP backend is a callable ``(factors, mode) -> M`` so the same driver
 runs over BLCO (in-memory or streaming/OOM), COO, F-COO, CSF, or the Pallas
 kernel path — mirroring how the paper swaps formats under one algorithm.
+
+The algorithm is exposed at two granularities:
+
+* ``cp_als`` — the one-shot driver (runs to convergence / iteration cap);
+* ``cp_als_init`` + ``cp_als_step`` — a resumable stepper over an explicit
+  ``CPState``, one full ALS sweep (all modes + fit update) per call. The
+  multi-tenant service scheduler interleaves *iterations* of many jobs
+  through this interface; ``cp_als`` is literally a loop over it, so both
+  paths are numerically identical.
 """
 from __future__ import annotations
 
@@ -21,6 +30,27 @@ class CPResult:
     iterations: int
 
 
+@dataclasses.dataclass
+class CPState:
+    """Resumable CP-ALS state: everything one ALS sweep reads and writes."""
+    dims: tuple
+    rank: int
+    norm_x: float
+    tol: float
+    factors: list        # N arrays (I_n, R), unit-norm columns
+    lam: jnp.ndarray     # (R,) column weights
+    grams: list          # N arrays (R, R) = factors[n].T @ factors[n]
+    fits: list           # per-iteration fit, appended by each step
+    prev_fit: float
+    iteration: int       # completed ALS sweeps
+    converged: bool
+
+    def as_result(self) -> CPResult:
+        return CPResult(factors=self.factors, lam=np.asarray(self.lam),
+                        fits=self.fits, converged=self.converged,
+                        iterations=self.iteration)
+
+
 def init_factors(dims, rank, *, seed=0, dtype=jnp.float32):
     rng = np.random.default_rng(seed)
     return [jnp.asarray(rng.standard_normal((d, rank)), dtype=dtype) for d in dims]
@@ -30,56 +60,77 @@ def _grams(factors):
     return [f.T @ f for f in factors]
 
 
+def cp_als_init(dims, rank, *, norm_x: float, tol: float = 1e-5,
+                seed: int = 0, dtype=jnp.float32, factors=None) -> CPState:
+    """Fresh CP-ALS state (factors drawn from ``seed`` unless given)."""
+    factors = list(factors) if factors is not None else \
+        init_factors(dims, rank, seed=seed, dtype=dtype)
+    return CPState(dims=tuple(dims), rank=rank, norm_x=norm_x, tol=tol,
+                   factors=factors, lam=jnp.ones((rank,), dtype),
+                   grams=_grams(factors), fits=[], prev_fit=-np.inf,
+                   iteration=0, converged=False)
+
+
+def cp_als_step(mttkrp_fn, state: CPState) -> CPState:
+    """One full ALS sweep (all modes, Alg. 1 lines 2-6) + fit update, in place.
+
+    mttkrp_fn(factors, mode) must return the (I_mode, R) MTTKRP result.
+    Returns ``state`` for chaining; a converged state is returned unchanged.
+    """
+    if state.converged:
+        return state
+    n_modes = len(state.dims)
+    rank = state.rank
+    dtype = state.factors[0].dtype
+    factors, grams = state.factors, state.grams
+    m_mat = None
+    for n in range(n_modes):
+        # V = hadamard of Gram matrices of all other modes (Alg. 1 line 3)
+        v = jnp.ones((rank, rank), dtype)
+        for m in range(n_modes):
+            if m != n:
+                v = v * grams[m]
+        m_mat = mttkrp_fn(factors, n)                    # line 4
+        a_new = m_mat @ jnp.linalg.pinv(v)               # line 5
+        lam = jnp.linalg.norm(a_new, axis=0)
+        lam = jnp.where(lam > 0, lam, 1.0)
+        factors[n] = a_new / lam
+        grams[n] = factors[n].T @ factors[n]
+        state.lam = lam
+
+    # fit = 1 - ||X - X_hat||_F / ||X||_F, computed without materializing
+    # X_hat (standard CP-ALS identity; m_mat is the last mode's MTTKRP).
+    last = n_modes - 1
+    v_all = jnp.ones((rank, rank), dtype)
+    for m in range(n_modes):
+        v_all = v_all * grams[m]
+    norm_est_sq = state.lam @ (v_all @ state.lam)
+    inner = jnp.sum(state.lam * jnp.sum(m_mat * factors[last], axis=0))
+    resid_sq = jnp.maximum(state.norm_x ** 2 + norm_est_sq - 2.0 * inner, 0.0)
+    fit = float(1.0 - jnp.sqrt(resid_sq) / state.norm_x)
+    state.fits.append(fit)
+    state.iteration += 1
+    if abs(fit - state.prev_fit) < state.tol:
+        state.converged = True
+    state.prev_fit = fit
+    return state
+
+
 def cp_als(mttkrp_fn, dims, rank, *, norm_x: float, iters: int = 25,
            tol: float = 1e-5, seed: int = 0, dtype=jnp.float32,
            factors=None) -> CPResult:
-    """Alternating least squares for rank-R CPD.
+    """Alternating least squares for rank-R CPD (one-shot driver).
 
     mttkrp_fn(factors, mode) must return the (I_mode, R) MTTKRP result.
     norm_x: Frobenius norm of the sparse tensor (sum of squared values)**0.5.
     """
-    n_modes = len(dims)
-    factors = list(factors) if factors is not None else \
-        init_factors(dims, rank, seed=seed, dtype=dtype)
-    lam = jnp.ones((rank,), dtype)
-    grams = _grams(factors)
-
-    fits: list[float] = []
-    prev_fit = -np.inf
-    converged = False
-    it = 0
-    for it in range(1, iters + 1):
-        for n in range(n_modes):
-            # V = hadamard of Gram matrices of all other modes (Alg. 1 line 3)
-            v = jnp.ones((rank, rank), dtype)
-            for m in range(n_modes):
-                if m != n:
-                    v = v * grams[m]
-            m_mat = mttkrp_fn(factors, n)                    # line 4
-            a_new = m_mat @ jnp.linalg.pinv(v)               # line 5
-            lam = jnp.linalg.norm(a_new, axis=0)
-            lam = jnp.where(lam > 0, lam, 1.0)
-            factors[n] = a_new / lam
-            grams[n] = factors[n].T @ factors[n]
-
-        # fit = 1 - ||X - X_hat||_F / ||X||_F, computed without materializing
-        # X_hat (standard CP-ALS identity; m_mat is the last mode's MTTKRP).
-        last = n_modes - 1
-        v_all = jnp.ones((rank, rank), dtype)
-        for m in range(n_modes):
-            v_all = v_all * grams[m]
-        norm_est_sq = lam @ (v_all @ lam)
-        inner = jnp.sum(lam * jnp.sum(m_mat * factors[last], axis=0))
-        resid_sq = jnp.maximum(norm_x ** 2 + norm_est_sq - 2.0 * inner, 0.0)
-        fit = float(1.0 - jnp.sqrt(resid_sq) / norm_x)
-        fits.append(fit)
-        if abs(fit - prev_fit) < tol:
-            converged = True
+    state = cp_als_init(dims, rank, norm_x=norm_x, tol=tol, seed=seed,
+                        dtype=dtype, factors=factors)
+    for _ in range(iters):
+        cp_als_step(mttkrp_fn, state)
+        if state.converged:
             break
-        prev_fit = fit
-
-    return CPResult(factors=factors, lam=np.asarray(lam), fits=fits,
-                    converged=converged, iterations=it)
+    return state.as_result()
 
 
 def reconstruct_dense(result: CPResult) -> np.ndarray:

@@ -26,6 +26,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.dist.compat import shard_map
+
 from .blco import BLCOTensor
 from .mttkrp import delinearize, _segment_compress
 
@@ -85,7 +87,7 @@ def make_distributed_mttkrp(blco: BLCOTensor, mesh, *, data_axis="data",
         out_rows = blco.dims[mode]
 
         @functools.partial(
-            jax.shard_map, mesh=mesh,
+            shard_map, mesh=mesh,
             in_specs=(nnz_spec, nnz_spec, nnz_spec, bases_spec,
                       tuple(factor_spec for _ in range(n_modes))),
             out_specs=factor_spec)

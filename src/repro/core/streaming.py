@@ -15,6 +15,12 @@ pending blocks with compute on active blocks. The JAX adaptation:
 * the factor matrices and the (I_mode, R) accumulator are device-resident;
   only nnz data streams.
 
+The building blocks (``ReservationSpec``, ``prepare_chunks``,
+``stream_mttkrp``) are free functions so higher layers can pool them:
+``repro.service.executor`` streams many tenants' tensors through one shared
+set of reservation shapes, reusing the same compiled executables.
+``OOMExecutor`` is the single-tensor convenience wrapper.
+
 ``OOMExecutor.stats`` records bytes moved and per-phase wall time so the
 Fig.-10 style benchmark can report overall vs in-memory throughput.
 """
@@ -40,6 +46,118 @@ class StreamStats:
     total_time_s: float = 0.0
 
 
+@dataclasses.dataclass(frozen=True)
+class ReservationSpec:
+    """A fixed device launch-buffer shape (the paper's queue reservation).
+
+    Every launch padded to this shape reuses one compiled executable and one
+    device buffer footprint — the unit the service's admission control and
+    executor pooling reason about.
+    """
+    nnz: int                 # padded slots per launch buffer
+    order: int               # tensor order (bases array width)
+    value_itemsize: int      # bytes per value
+
+    @property
+    def bytes_per_launch(self) -> int:
+        """Device bytes of one in-flight launch (hi + lo + vals + bases)."""
+        return self.nnz * (4 + 4 + self.value_itemsize + 4 * self.order)
+
+    def bytes_in_flight(self, queues: int) -> int:
+        return self.bytes_per_launch * queues
+
+
+def reservation_for(blco: BLCOTensor,
+                    reservation_nnz: int | None = None) -> ReservationSpec:
+    """Reservation covering the largest launch (pow2-padded unless given)."""
+    max_launch = max((l.nnz for l in blco.launches), default=1)
+    nnz = int(reservation_nnz or _next_pow2(max_launch))
+    if nnz < max_launch:
+        raise ValueError("reservation smaller than largest launch")
+    return ReservationSpec(nnz=nnz, order=blco.order,
+                           value_itemsize=blco.values.dtype.itemsize)
+
+
+def prepare_chunks(blco: BLCOTensor, reservation_nnz: int):
+    """Pad every launch to the reservation size (host-side, once).
+
+    Returns a list of (hi, lo, vals, bases, n) numpy tuples ready for
+    device_put. Zero-padding is exact for MTTKRP: pad slots delinearize to
+    coordinate 0 with value 0, contributing +0.0 to row 0.
+    """
+    b = blco
+    bases_all = b.block_upper_bases()
+    block_ids = b.element_block_ids()
+    chunks = []
+    r = reservation_nnz
+    for launch in b.launches:
+        s, e = launch.start, launch.end
+        n = e - s
+        if n > r:
+            raise ValueError(f"launch of {n} nnz exceeds reservation {r}")
+        hi = np.zeros(r, np.uint32); hi[:n] = b.idx_hi[s:e]
+        lo = np.zeros(r, np.uint32); lo[:n] = b.idx_lo[s:e]
+        vals = np.zeros(r, b.values.dtype); vals[:n] = b.values[s:e]
+        bases = np.zeros((r, b.order), np.int32)
+        bases[:n] = bases_all[block_ids[s:e]]
+        chunks.append((hi, lo, vals, bases, n))
+    return chunks
+
+
+def stream_mttkrp(chunks, blco: BLCOTensor, factors, mode: int, *,
+                  queues: int, resolution: str = "auto",
+                  copies: int = DEFAULT_COPIES,
+                  stats: StreamStats | None = None):
+    """Stream prepared reservation chunks through the launch kernel.
+
+    Keeps up to ``queues`` H2D transfers in flight ahead of compute (the
+    paper's queue overlap). ``chunks`` must all share one reservation shape
+    so every launch hits the same compiled executable.
+    """
+    b = blco
+    if resolution == "auto":
+        resolution = choose_resolution(b.dims[mode])
+    factors = tuple(jnp.asarray(f) for f in factors)
+    rank = factors[0].shape[1]
+    out = jnp.zeros((b.dims[mode], rank), factors[0].dtype)
+    stats = stats if stats is not None else StreamStats()
+
+    t_start = time.perf_counter()
+    in_flight: list[tuple] = []
+
+    def _issue(chunk):
+        t0 = time.perf_counter()
+        hi, lo, vals, bases, n = chunk
+        dev = (jax.device_put(hi), jax.device_put(lo),
+               jax.device_put(vals), jax.device_put(bases))
+        stats.put_time_s += time.perf_counter() - t0
+        stats.h2d_bytes += hi.nbytes + lo.nbytes + vals.nbytes + bases.nbytes
+        return dev
+
+    def _consume(dev):
+        nonlocal out
+        t0 = time.perf_counter()
+        hi, lo, vals, bases = dev
+        out = out + launch_mttkrp(
+            hi, lo, vals, bases, factors,
+            re_fields=b.re.field_bits, re_shifts=b.re.field_shift,
+            mode=mode, out_rows=b.dims[mode],
+            resolution=resolution, copies=copies)
+        stats.compute_time_s += time.perf_counter() - t0
+        stats.launches += 1
+
+    for chunk in chunks:
+        # keep up to `queues` transfers in flight ahead of compute
+        in_flight.append(_issue(chunk))
+        if len(in_flight) >= queues:
+            _consume(in_flight.pop(0))
+    while in_flight:
+        _consume(in_flight.pop(0))
+    out.block_until_ready()
+    stats.total_time_s += time.perf_counter() - t_start
+    return out
+
+
 class OOMExecutor:
     """Streams a (host-resident) BLCO tensor through fixed device reservations."""
 
@@ -47,74 +165,19 @@ class OOMExecutor:
                  reservation_nnz: int | None = None):
         self.blco = blco
         self.queues = queues
-        max_launch = max((l.nnz for l in blco.launches), default=1)
-        self.reservation = int(reservation_nnz or _next_pow2(max_launch))
-        if self.reservation < max_launch:
-            raise ValueError("reservation smaller than largest launch")
-        self._prepared = self._prepare_host_chunks()
+        self.spec = reservation_for(blco, reservation_nnz)
+        self._prepared = prepare_chunks(blco, self.spec.nnz)
         self.stats = StreamStats()
 
-    def _prepare_host_chunks(self):
-        """Pad every launch to the reservation size (host-side, once)."""
-        b = self.blco
-        bases_all = b.block_upper_bases()
-        block_ids = b.element_block_ids()
-        chunks = []
-        r = self.reservation
-        for launch in b.launches:
-            s, e = launch.start, launch.end
-            n = e - s
-            hi = np.zeros(r, np.uint32); hi[:n] = b.idx_hi[s:e]
-            lo = np.zeros(r, np.uint32); lo[:n] = b.idx_lo[s:e]
-            vals = np.zeros(r, b.values.dtype); vals[:n] = b.values[s:e]
-            bases = np.zeros((r, b.order), np.int32)
-            bases[:n] = bases_all[block_ids[s:e]]
-            chunks.append((hi, lo, vals, bases, n))
-        return chunks
+    @property
+    def reservation(self) -> int:
+        return self.spec.nnz
 
     def mttkrp(self, factors, mode: int, *, resolution: str = "auto",
                copies: int = DEFAULT_COPIES):
-        b = self.blco
-        if resolution == "auto":
-            resolution = choose_resolution(b.dims[mode])
-        factors = tuple(jnp.asarray(f) for f in factors)
-        rank = factors[0].shape[1]
-        out = jnp.zeros((b.dims[mode], rank), factors[0].dtype)
-
-        t_start = time.perf_counter()
-        in_flight: list[tuple] = []
-
-        def _issue(chunk):
-            t0 = time.perf_counter()
-            hi, lo, vals, bases, n = chunk
-            dev = (jax.device_put(hi), jax.device_put(lo),
-                   jax.device_put(vals), jax.device_put(bases))
-            self.stats.put_time_s += time.perf_counter() - t0
-            self.stats.h2d_bytes += hi.nbytes + lo.nbytes + vals.nbytes + bases.nbytes
-            return dev
-
-        def _consume(dev):
-            nonlocal out
-            t0 = time.perf_counter()
-            hi, lo, vals, bases = dev
-            out = out + launch_mttkrp(
-                hi, lo, vals, bases, factors,
-                re_fields=b.re.field_bits, re_shifts=b.re.field_shift,
-                mode=mode, out_rows=b.dims[mode],
-                resolution=resolution, copies=copies)
-            self.stats.compute_time_s += time.perf_counter() - t0
-            self.stats.launches += 1
-
-        for chunk in self._prepared:
-            # keep up to `queues` transfers in flight ahead of compute
-            in_flight.append(_issue(chunk))
-            if len(in_flight) >= self.queues:
-                _consume(in_flight.pop(0))
-        while in_flight:
-            _consume(in_flight.pop(0))
-        out.block_until_ready()
-        self.stats.total_time_s += time.perf_counter() - t_start
-        return out
+        return stream_mttkrp(self._prepared, self.blco, factors, mode,
+                             queues=self.queues, resolution=resolution,
+                             copies=copies, stats=self.stats)
 
 
 def _next_pow2(n: int) -> int:

@@ -1,0 +1,34 @@
+"""Version-tolerant wrappers over jax APIs that moved between releases."""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f=None, *, mesh, in_specs, out_specs, check_vma=False):
+    """``jax.shard_map`` (new) or ``jax.experimental.shard_map`` (<=0.4.x).
+
+    Usable both directly and as a keyword-only partial/decorator, mirroring
+    the modern ``jax.shard_map`` call patterns. Replication checking is
+    disabled by default (``check_vma=False`` / legacy ``check_rep=False``):
+    the call sites psum/pmean into replicated outputs themselves.
+    """
+    if hasattr(jax, "shard_map"):
+        deco = lambda fn: jax.shard_map(  # noqa: E731
+            fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma)
+    else:
+        from jax.experimental.shard_map import shard_map as _sm
+        deco = lambda fn: _sm(            # noqa: E731
+            fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_rep=check_vma)
+    return deco if f is None else deco(f)
+
+
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` with Auto axis types where the release supports them."""
+    try:
+        from jax.sharding import AxisType
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+    except (ImportError, TypeError):
+        return jax.make_mesh(shape, axes)

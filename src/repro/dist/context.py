@@ -1,0 +1,66 @@
+"""Process-wide mesh context + logical-axis activation constraints.
+
+Model code never names mesh axes directly; it anchors activations with
+logical names — ``"dp"`` (all data-parallel/ZeRO axes: ``data``, or
+``(pod, data)`` on multi-pod meshes) and ``"tp"`` (the ``model`` axis).
+With no mesh set (single-device tests, CPU smoke runs) every constraint is
+an exact no-op, so the same model code runs everywhere.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_MESH = None
+
+
+def set_mesh(mesh) -> None:
+    """Install (or clear, with ``None``) the process-wide mesh."""
+    global _MESH
+    _MESH = mesh
+
+
+def get_mesh():
+    return _MESH
+
+
+def _resolve(mesh, logical):
+    """Map a logical axis name to concrete mesh axes (or None to drop it)."""
+    if logical is None:
+        return None
+    if logical == "dp":
+        from .sharding import fsdp_axes
+        axes = tuple(a for a in fsdp_axes(mesh) if a in mesh.axis_names)
+        if not axes:
+            return None
+        return axes if len(axes) > 1 else axes[0]
+    if logical == "tp":
+        return "model" if "model" in mesh.axis_names else None
+    # already a concrete mesh axis name
+    return logical if logical in mesh.axis_names else None
+
+
+def constrain(x, *axes):
+    """``with_sharding_constraint`` by logical per-dim axis names.
+
+    ``axes`` has one entry per dim of ``x``: "dp", "tp", a concrete mesh
+    axis name, or None. Dims whose extent the axis size does not divide are
+    left unconstrained (GSPMD would pad; the call sites treat these anchors
+    as hints, not requirements).
+    """
+    mesh = get_mesh()
+    if mesh is None:
+        return x
+    assert len(axes) == x.ndim, (axes, x.shape)
+    spec = []
+    for dim, logical in zip(x.shape, axes):
+        ax = _resolve(mesh, logical)
+        if ax is not None:
+            size = 1
+            for a in (ax if isinstance(ax, tuple) else (ax,)):
+                size *= mesh.shape[a]
+            if size == 0 or dim % size != 0:
+                ax = None
+        spec.append(ax)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))

@@ -1,0 +1,112 @@
+"""Parameter sharding rules: shape-only ZeRO/TP partition-spec planning.
+
+Works on ``jax.eval_shape`` trees (no devices, no allocation): every rule
+keys on the parameter *path* and *shape* alone, so the dry-run can plan
+256/512-chip layouts from a laptop.
+
+Rules:
+
+* layer-stacked parameters (top-level groups named ``*_layers``, plus the
+  per-site LoRA stack) are never sharded on their leading stack dims —
+  those dims are scanned over, not matmul dims;
+* one dim per parameter is sharded over the data/ZeRO axes (``data``, or
+  ``(pod, data)``): the largest dim the axis-size product divides;
+* tiny parameters stay replicated (sharding a 4 KiB scale vector buys
+  nothing and costs a collective on every use).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# Production axis extents (launch/mesh.py: 16x16 single pod, 2x16x16
+# multi-pod) — used for shape-only planning when no live mesh is given.
+PLAN_AXIS_SIZES = {"pod": 2, "data": 16, "model": 16}
+
+# Parameters smaller than this many elements stay replicated.
+MIN_SHARD_ELEMS = 1 << 14
+
+
+def fsdp_axes(mesh) -> tuple[str, ...]:
+    """All data-parallel/ZeRO axes of a mesh: every axis except ``model``."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def tree_paths(tree) -> dict:
+    """Flatten a param tree to {"a/b/c": leaf} (dict/list keys joined by /)."""
+    out = {}
+    for kp, leaf in jax.tree_util.tree_leaves_with_path(tree):
+        parts = []
+        for k in kp:
+            if hasattr(k, "key"):
+                parts.append(str(k.key))
+            elif hasattr(k, "idx"):
+                parts.append(str(k.idx))
+            else:
+                parts.append(str(k))
+        out["/".join(parts)] = leaf
+    return out
+
+
+def _n_stack_dims(path: str) -> int:
+    """Leading dims that index stacked (scanned) layers, never sharded."""
+    top = path.split("/", 1)[0]
+    if top == "group_layers":
+        return 2                      # (group, layer-in-group, ...)
+    if top.endswith("_layers") or top == "site_lora":
+        return 1
+    return 0
+
+
+def param_spec(path: str, shape, fsdp, *, axis_sizes=None) -> P:
+    """PartitionSpec for one parameter: shard one dim over the given axes.
+
+    ``fsdp``: a mesh axis name or tuple of names (the ZeRO axes; also used
+    with ``("model",)`` for TP-style serving layouts). ``axis_sizes`` maps
+    axis name -> extent; defaults to the production mesh extents so the
+    spec is computable from shapes alone.
+    """
+    axes = (fsdp,) if isinstance(fsdp, str) else tuple(fsdp)
+    sizes = axis_sizes or PLAN_AXIS_SIZES
+    size = int(np.prod([sizes[a] for a in axes])) if axes else 0
+    spec = [None] * len(shape)
+    if size <= 1 or int(np.prod(shape)) < MIN_SHARD_ELEMS:
+        return P(*spec)
+    best = None
+    for d in range(_n_stack_dims(path), len(shape)):
+        if shape[d] % size == 0 and (best is None or shape[d] > shape[best]):
+            best = d
+    if best is not None:
+        spec[best] = axes if len(axes) > 1 else axes[0]
+    return P(*spec)
+
+
+def param_shardings(mesh, tree, *, mode: str = "train"):
+    """NamedSharding tree for a param (or optimizer-moment) tree.
+
+    mode="train": ZeRO — shard over the data axes (gradients/optimizer
+    states follow the same layout). mode="serve": prefer TP — weights stay
+    sharded over ``model`` where divisible (no per-step ZeRO all-gather),
+    falling back to the data axes otherwise.
+    """
+    sizes = dict(mesh.shape)
+    f = fsdp_axes(mesh)
+    preference = [("model",), f] if mode == "serve" else [f]
+
+    def one(path, leaf):
+        for axes in preference:
+            spec = param_spec(path, leaf.shape, axes, axis_sizes=sizes)
+            if any(ax is not None for ax in tuple(spec)):
+                return NamedSharding(mesh, spec)
+        return NamedSharding(mesh, P())
+
+    paths = tree_paths(tree)
+    flat = {p: one(p, leaf) for p, leaf in paths.items()}
+
+    def rebuild(kp, leaf):
+        parts = [str(k.key) if hasattr(k, "key") else str(getattr(k, "idx", k))
+                 for k in kp]
+        return flat["/".join(parts)]
+
+    return jax.tree_util.tree_map_with_path(rebuild, tree)

@@ -1,0 +1,26 @@
+"""Multi-tenant decomposition service over pooled device reservations.
+
+Turns the paper's single-copy BLCO + fixed-reservation streaming into a
+serving layer: many concurrent CP-ALS / MTTKRP jobs share one accelerator
+under a device-memory admission budget.
+
+    registry   BLCO construction cache keyed by content fingerprint
+    executor   pooled reservation executor (shared launch-buffer shapes)
+    scheduler  FIFO admission under a byte budget + round-robin iterations
+    api        typed requests/responses + the DecompositionService facade
+    metrics    per-job and service-wide counters
+"""
+from .api import (DecompositionResult, DecompositionService, JobStatus,
+                  MTTKRPQuery, SubmitDecomposition, DEFAULT_DEVICE_BUDGET)
+from .executor import PooledExecutor
+from .metrics import JobMetrics, ServiceMetrics
+from .registry import BuildParams, TensorHandle, TensorRegistry, fingerprint
+from .scheduler import Job, JobScheduler, QUEUED, RUNNING, DONE, FAILED
+
+__all__ = [
+    "DecompositionResult", "DecompositionService", "JobStatus",
+    "MTTKRPQuery", "SubmitDecomposition", "DEFAULT_DEVICE_BUDGET",
+    "PooledExecutor", "JobMetrics", "ServiceMetrics",
+    "BuildParams", "TensorHandle", "TensorRegistry", "fingerprint",
+    "Job", "JobScheduler", "QUEUED", "RUNNING", "DONE", "FAILED",
+]

@@ -1,0 +1,156 @@
+"""Typed request/response surface + the synchronous service facade.
+
+``DecompositionService`` wires registry -> scheduler -> pooled executor into
+one front door: submit decomposition jobs (CP-ALS to convergence), issue
+one-shot MTTKRP queries against registered tensors, drive everything to
+completion, and read per-job / service-wide metrics.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+from repro.core.cp_als import CPResult
+from repro.core.tensor import SparseTensor
+
+from . import scheduler as sched
+from .executor import PooledExecutor
+from .metrics import ServiceMetrics
+from .registry import BuildParams, TensorRegistry
+
+DEFAULT_DEVICE_BUDGET = 256 << 20           # 256 MiB of pooled reservations
+
+
+@dataclasses.dataclass
+class SubmitDecomposition:
+    """Request: decompose ``tensor`` at rank R (CP-ALS until converged/iters)."""
+    tensor: SparseTensor
+    rank: int
+    iters: int = 25
+    tol: float = 1e-5
+    seed: int = 0
+    build: BuildParams = dataclasses.field(default_factory=BuildParams)
+    reservation_nnz: int | None = None
+
+
+@dataclasses.dataclass
+class MTTKRPQuery:
+    """Request: one streamed mode-n MTTKRP against a (cached) tensor."""
+    tensor: SparseTensor
+    factors: list
+    mode: int
+    build: BuildParams = dataclasses.field(default_factory=BuildParams)
+    reservation_nnz: int | None = None
+
+
+@dataclasses.dataclass
+class JobStatus:
+    """Response: where one job is in its lifecycle."""
+    job_id: int
+    state: str                   # queued | running | done | failed
+    tensor_key: str
+    iteration: int
+    fit: float | None
+    converged: bool
+    queue_wait_s: float
+    cache_hit: bool
+    error: str | None = None
+
+
+@dataclasses.dataclass
+class DecompositionResult:
+    """Response: a finished decomposition + its cost accounting."""
+    job_id: int
+    tensor_key: str
+    result: CPResult
+    metrics: dict
+
+
+class DecompositionService:
+    """Multi-tenant decomposition service over pooled device reservations."""
+
+    def __init__(self, *, device_budget_bytes: int = DEFAULT_DEVICE_BUDGET,
+                 queues: int = 4, max_active: int | None = None):
+        self.registry = TensorRegistry()
+        self.executor = PooledExecutor(queues=queues)
+        self.metrics = ServiceMetrics()
+        self.scheduler = sched.JobScheduler(
+            self.executor, device_budget_bytes=device_budget_bytes,
+            max_active=max_active, metrics=self.metrics)
+
+    # ------------------------------------------------------------- requests
+    def submit(self, req: SubmitDecomposition) -> int:
+        """Register (or cache-hit) the tensor and enqueue a CP-ALS job."""
+        hits_before = self.registry.hits
+        handle = self.registry.register(req.tensor, build=req.build,
+                                        reservation_nnz=req.reservation_nnz)
+        self._sync_cache_counters()
+        job_id = self.scheduler.submit(handle, rank=req.rank,
+                                       iters=req.iters, tol=req.tol,
+                                       seed=req.seed)
+        self.scheduler.jobs[job_id].metrics.cache_hit = \
+            self.registry.hits > hits_before
+        return job_id
+
+    def mttkrp(self, query: MTTKRPQuery):
+        """One-shot streamed MTTKRP (registers/caches the tensor first)."""
+        if not 0 <= query.mode < query.tensor.order:
+            raise ValueError(f"mode {query.mode} out of range for "
+                             f"order-{query.tensor.order} tensor")
+        handle = self.registry.register(query.tensor, build=query.build,
+                                        reservation_nnz=query.reservation_nnz)
+        self._sync_cache_counters()
+        # queries obey the same admission budget as jobs: a one-shot MTTKRP
+        # must not push the pooled reservations past the device budget
+        held = self.executor.acquire(handle)
+        if self.metrics.admitted_reservation_bytes + held > \
+                self.scheduler.device_budget_bytes:
+            self.executor.release(handle)
+            raise ValueError(
+                f"query reservation ({held} B) does not fit the device "
+                f"budget ({self.scheduler.device_budget_bytes} B) with "
+                f"{self.metrics.admitted_reservation_bytes} B already admitted")
+        self.metrics.hold_bytes(held)
+        try:
+            return self.executor.mttkrp(handle, query.factors, query.mode)
+        finally:
+            freed = self.executor.release(handle)
+            self.metrics.hold_bytes(-freed)
+
+    # --------------------------------------------------------------- driving
+    def step(self) -> bool:
+        """One fair-share scheduling cycle; True while work remains."""
+        return self.scheduler.step()
+
+    def run(self) -> dict[int, DecompositionResult]:
+        """Drive every submitted job to completion; return finished results."""
+        self.scheduler.run()
+        return {job_id: self.result(job_id)
+                for job_id, job in self.scheduler.jobs.items()
+                if job.state == sched.DONE}
+
+    # ---------------------------------------------------------------- status
+    def status(self, job_id: int) -> JobStatus:
+        job = self.scheduler.jobs[job_id]
+        return JobStatus(
+            job_id=job.job_id, state=job.state, tensor_key=job.handle.key,
+            iteration=job.cp.iteration if job.cp is not None else 0,
+            fit=job.fit,
+            converged=bool(job.cp is not None and job.cp.converged),
+            queue_wait_s=job.metrics.queue_wait_s,
+            cache_hit=job.metrics.cache_hit, error=job.error)
+
+    def result(self, job_id: int) -> DecompositionResult:
+        job = self.scheduler.jobs[job_id]
+        if job.state != sched.DONE:
+            raise ValueError(f"job {job_id} is {job.state}, not done")
+        return DecompositionResult(
+            job_id=job_id, tensor_key=job.handle.key,
+            result=job.cp.as_result(), metrics=job.metrics.snapshot())
+
+    def service_metrics(self) -> dict[str, Any]:
+        return self.metrics.snapshot()
+
+    def _sync_cache_counters(self) -> None:
+        self.metrics.blco_cache_hits = self.registry.hits
+        self.metrics.blco_cache_misses = self.registry.misses

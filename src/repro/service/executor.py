@@ -1,0 +1,94 @@
+"""Pooled reservation executor: fixed launch-buffer shapes shared by tenants.
+
+Refactored out of ``core/streaming.py``: the single-tensor ``OOMExecutor``
+owns one reservation; here a *pool* of reservation shapes serves every
+admitted job. Two jobs whose tensors pad to the same ``ReservationSpec``
+stream through identical device buffer shapes, so they hit the same
+compiled ``launch_mttkrp`` executable (jit caches on shapes + static args)
+and the scheduler charges the device budget once per pooled shape, not once
+per job — the multi-tenant generalization of the paper's reused queue
+reservations.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.mttkrp import DEFAULT_COPIES
+from repro.core.streaming import ReservationSpec, StreamStats, stream_mttkrp
+
+from .registry import TensorHandle
+
+
+@dataclasses.dataclass
+class PoolEntry:
+    spec: ReservationSpec
+    refcount: int = 0
+    launches: int = 0
+
+
+class PooledExecutor:
+    """Streams any registered tensor through a shared reservation pool."""
+
+    def __init__(self, *, queues: int = 4):
+        self.queues = queues
+        self._pool: dict[ReservationSpec, PoolEntry] = {}
+
+    # ------------------------------------------------------ pool accounting
+    def acquire(self, handle: TensorHandle) -> int:
+        """Take a reference on the handle's reservation shape.
+
+        Returns the device bytes newly held (0 when the shape is already
+        pooled — the paper's fixed reservations are shape-keyed, so a second
+        tenant on an existing shape is free).
+        """
+        entry = self._pool.get(handle.spec)
+        if entry is None:
+            entry = self._pool[handle.spec] = PoolEntry(spec=handle.spec)
+        entry.refcount += 1
+        if entry.refcount == 1:
+            return handle.spec.bytes_in_flight(self.queues)
+        return 0
+
+    def release(self, handle: TensorHandle) -> int:
+        """Drop a reference; returns device bytes freed (0 if still shared)."""
+        entry = self._pool[handle.spec]
+        entry.refcount -= 1
+        if entry.refcount == 0:
+            del self._pool[handle.spec]
+            return handle.spec.bytes_in_flight(self.queues)
+        return 0
+
+    def pooled_bytes(self) -> int:
+        """Device bytes currently reserved across all pooled shapes."""
+        return sum(spec.bytes_in_flight(self.queues) for spec in self._pool)
+
+    def reservation_bytes(self, handle: TensorHandle) -> int:
+        """Bytes admitting this handle would add to the pool."""
+        if handle.spec in self._pool:
+            return 0
+        return handle.spec.bytes_in_flight(self.queues)
+
+    @property
+    def pool_size(self) -> int:
+        return len(self._pool)
+
+    # ------------------------------------------------------------- compute
+    def mttkrp(self, handle: TensorHandle, factors, mode: int, *,
+               resolution: str = "auto", copies: int = DEFAULT_COPIES,
+               stats: StreamStats | None = None):
+        """Streamed mode-n MTTKRP for one registered tensor.
+
+        ``stats`` is the caller's (per-job) accounting object; pool-wide
+        launch counts are kept on the entry.
+        """
+        entry = self._pool.get(handle.spec)
+        if entry is None or entry.refcount <= 0:
+            raise RuntimeError("handle not admitted to the pool "
+                               "(scheduler admission must acquire() first)")
+        stats = stats if stats is not None else StreamStats()
+        before = stats.launches
+        out = stream_mttkrp(handle.chunks, handle.blco, factors, mode,
+                            queues=self.queues, resolution=resolution,
+                            copies=copies, stats=stats)
+        entry.launches += stats.launches - before
+        return out

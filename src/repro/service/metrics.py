@@ -1,0 +1,89 @@
+"""Per-job and service-wide counters.
+
+Every job carries its own ``StreamStats`` (the core streaming layer already
+accounts H2D bytes / launches / phase times per stats object), plus queue
+timestamps; the service aggregates across jobs and tracks the admission
+bytes the scheduler holds against the device budget.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from repro.core.streaming import StreamStats
+
+
+@dataclasses.dataclass
+class JobMetrics:
+    submitted_s: float = dataclasses.field(default_factory=time.perf_counter)
+    admitted_s: float | None = None
+    completed_s: float | None = None
+    iterations: int = 0
+    cache_hit: bool = False
+    stream: StreamStats = dataclasses.field(default_factory=StreamStats)
+
+    @property
+    def queue_wait_s(self) -> float:
+        end = self.admitted_s if self.admitted_s is not None else time.perf_counter()
+        return end - self.submitted_s
+
+    @property
+    def run_time_s(self) -> float | None:
+        if self.admitted_s is None or self.completed_s is None:
+            return None
+        return self.completed_s - self.admitted_s
+
+    def snapshot(self) -> dict:
+        return {
+            "iterations": self.iterations,
+            "queue_wait_s": self.queue_wait_s,
+            "run_time_s": self.run_time_s,
+            "cache_hit": self.cache_hit,
+            "h2d_bytes": self.stream.h2d_bytes,
+            "launches": self.stream.launches,
+            "put_time_s": self.stream.put_time_s,
+            "compute_time_s": self.stream.compute_time_s,
+        }
+
+
+@dataclasses.dataclass
+class ServiceMetrics:
+    started_s: float = dataclasses.field(default_factory=time.perf_counter)
+    jobs_submitted: int = 0
+    jobs_admitted: int = 0
+    jobs_completed: int = 0
+    jobs_failed: int = 0
+    blco_cache_hits: int = 0
+    blco_cache_misses: int = 0
+    iterations_total: int = 0
+    h2d_bytes_total: int = 0
+    launches_total: int = 0
+    admitted_reservation_bytes: int = 0        # currently held vs the budget
+    peak_admitted_reservation_bytes: int = 0
+
+    def hold_bytes(self, delta: int) -> None:
+        self.admitted_reservation_bytes += delta
+        self.peak_admitted_reservation_bytes = max(
+            self.peak_admitted_reservation_bytes,
+            self.admitted_reservation_bytes)
+
+    def iterations_per_sec(self) -> float:
+        dt = time.perf_counter() - self.started_s
+        return self.iterations_total / dt if dt > 0 else 0.0
+
+    def snapshot(self) -> dict:
+        return {
+            "jobs_submitted": self.jobs_submitted,
+            "jobs_admitted": self.jobs_admitted,
+            "jobs_completed": self.jobs_completed,
+            "jobs_failed": self.jobs_failed,
+            "blco_cache_hits": self.blco_cache_hits,
+            "blco_cache_misses": self.blco_cache_misses,
+            "iterations_total": self.iterations_total,
+            "iterations_per_sec": self.iterations_per_sec(),
+            "h2d_bytes_total": self.h2d_bytes_total,
+            "launches_total": self.launches_total,
+            "admitted_reservation_bytes": self.admitted_reservation_bytes,
+            "peak_admitted_reservation_bytes":
+                self.peak_admitted_reservation_bytes,
+        }

@@ -1,0 +1,109 @@
+"""Tensor registry: a BLCO construction cache keyed by content fingerprint.
+
+BLCO's defining property (paper §4.2) is that ONE tensor copy serves every
+mode and every decomposition run. In a multi-tenant service that property
+compounds: any number of jobs on the same tensor share one BLCO build, one
+set of reservation-padded launch chunks, and (via the pooled executor) one
+compiled executable per reservation shape. The cache key is a content
+fingerprint (dims + coordinates + values) combined with the build
+parameters, so a re-submitted tensor — even a different ``SparseTensor``
+object with identical content — is a hit, while changing ``target_bits`` or
+the blocking budget correctly misses.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+
+import numpy as np
+
+from repro.core.blco import BLCOTensor, build_blco, format_bytes
+from repro.core.streaming import ReservationSpec, prepare_chunks, reservation_for
+from repro.core.tensor import SparseTensor
+
+
+@dataclasses.dataclass(frozen=True)
+class BuildParams:
+    """BLCO construction parameters (see ``core.build_blco``)."""
+    target_bits: int = 64
+    max_nnz_per_block: int = 1 << 27
+    launch_nnz_budget: int | None = None
+
+
+def fingerprint(t: SparseTensor, build: BuildParams,
+                reservation_nnz: int | None = None) -> str:
+    """Content hash of (dims, coordinates, values) + build params."""
+    h = hashlib.sha256()
+    h.update(np.asarray(t.dims, np.int64).tobytes())
+    h.update(np.ascontiguousarray(t.indices).tobytes())
+    h.update(np.ascontiguousarray(t.values).tobytes())
+    h.update(str(t.values.dtype).encode())
+    h.update(repr((build.target_bits, build.max_nnz_per_block,
+                   build.launch_nnz_budget, reservation_nnz)).encode())
+    return h.hexdigest()[:16]
+
+
+@dataclasses.dataclass
+class TensorHandle:
+    """A registered tensor: the single shared copy every job streams from."""
+    key: str
+    dims: tuple
+    nnz: int
+    norm_x: float                # Frobenius norm (CP-ALS fit denominator)
+    blco: BLCOTensor
+    spec: ReservationSpec        # padded launch-buffer shape
+    chunks: list                 # reservation-padded launch chunks (host)
+
+    @property
+    def order(self) -> int:
+        return len(self.dims)
+
+    @property
+    def format_bytes(self) -> int:
+        return format_bytes(self.blco)
+
+
+class TensorRegistry:
+    """Fingerprint-keyed cache of BLCO builds + prepared launch chunks."""
+
+    def __init__(self):
+        self._cache: dict[str, TensorHandle] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def register(self, t: SparseTensor, *,
+                 build: BuildParams | None = None,
+                 reservation_nnz: int | None = None) -> TensorHandle:
+        build = build or BuildParams()
+        key = fingerprint(t, build, reservation_nnz)
+        handle = self._cache.get(key)
+        if handle is not None:
+            self.hits += 1
+            return handle
+        self.misses += 1
+        blco = build_blco(t, target_bits=build.target_bits,
+                          max_nnz_per_block=build.max_nnz_per_block,
+                          launch_nnz_budget=build.launch_nnz_budget)
+        spec = reservation_for(blco, reservation_nnz)
+        handle = TensorHandle(
+            key=key, dims=t.dims, nnz=t.nnz,
+            norm_x=float(np.linalg.norm(t.values.astype(np.float64))),
+            blco=blco, spec=spec, chunks=prepare_chunks(blco, spec.nnz))
+        self._cache[key] = handle
+        return handle
+
+    def get(self, key: str) -> TensorHandle | None:
+        return self._cache.get(key)
+
+    def evict(self, key: str) -> bool:
+        return self._cache.pop(key, None) is not None
+
+    def __len__(self) -> int:
+        return len(self._cache)
+
+    def host_bytes(self) -> int:
+        """Host-resident bytes of all cached prepared chunks."""
+        total = 0
+        for h in self._cache.values():
+            total += h.spec.bytes_per_launch * len(h.chunks)
+        return total

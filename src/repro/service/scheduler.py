@@ -1,0 +1,159 @@
+"""Job scheduler: admission by the paper's device-memory constraint + fair share.
+
+Admission control is the service restatement of the paper's §4.2 memory
+constraint: the sum of admitted jobs' padded reservation bytes (queue depth
+x reservation launch-buffer bytes, charged once per pooled shape) must stay
+within a configurable device budget. Jobs that do not fit wait in a FIFO
+queue; completions release their reservation references and re-run
+admission.
+
+Fair share is round-robin at CP-ALS *iteration* granularity: each
+scheduling cycle gives every active job exactly one full ALS sweep
+(``cp_als_step``), so a 4-tenant service advances all tenants at 1/4 the
+solo rate instead of serializing whole decompositions — the load-balance
+behaviour heterogeneous MTTKRP workloads need (Nisa et al.).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+from repro.core.cp_als import CPState, cp_als_init, cp_als_step
+
+from .executor import PooledExecutor
+from .metrics import JobMetrics, ServiceMetrics
+from .registry import TensorHandle
+
+QUEUED = "queued"
+RUNNING = "running"
+DONE = "done"
+FAILED = "failed"
+
+
+@dataclasses.dataclass
+class Job:
+    job_id: int
+    handle: TensorHandle
+    rank: int
+    iters: int
+    tol: float
+    seed: int
+    state: str = QUEUED
+    cp: CPState | None = None
+    metrics: JobMetrics = dataclasses.field(default_factory=JobMetrics)
+    error: str | None = None
+    mttkrp_fn: Callable | None = None
+
+    @property
+    def fit(self) -> float | None:
+        if self.cp is None or not self.cp.fits:
+            return None
+        return self.cp.fits[-1]
+
+
+class JobScheduler:
+    """FIFO admission under a reservation-byte budget; round-robin stepping."""
+
+    def __init__(self, executor: PooledExecutor, *,
+                 device_budget_bytes: int,
+                 max_active: int | None = None,
+                 metrics: ServiceMetrics | None = None):
+        self.executor = executor
+        self.device_budget_bytes = int(device_budget_bytes)
+        self.max_active = max_active
+        self.metrics = metrics if metrics is not None else ServiceMetrics()
+        self._next_id = 0
+        self.jobs: dict[int, Job] = {}
+        self.pending: list[int] = []          # FIFO admission queue
+        self.active: list[int] = []           # admission order = RR order
+        self.trace: list[int] = []            # job id per executed iteration
+
+    # ------------------------------------------------------------ lifecycle
+    def submit(self, handle: TensorHandle, *, rank: int, iters: int = 25,
+               tol: float = 1e-5, seed: int = 0) -> int:
+        need = handle.spec.bytes_in_flight(self.executor.queues)
+        if need > self.device_budget_bytes:
+            raise ValueError(
+                f"job reservation ({need} B) exceeds the device budget "
+                f"({self.device_budget_bytes} B): it can never be admitted")
+        job = Job(job_id=self._next_id, handle=handle, rank=rank,
+                  iters=iters, tol=tol, seed=seed)
+        self._next_id += 1
+        self.jobs[job.job_id] = job
+        self.pending.append(job.job_id)
+        self.metrics.jobs_submitted += 1
+        self._admit()
+        return job.job_id
+
+    def _admit(self) -> None:
+        """Admit queued jobs FIFO while the reservation budget allows."""
+        admitted_any = True
+        while admitted_any and self.pending:
+            admitted_any = False
+            if self.max_active is not None and \
+                    len(self.active) >= self.max_active:
+                return
+            job = self.jobs[self.pending[0]]
+            extra = self.executor.reservation_bytes(job.handle)
+            if self.metrics.admitted_reservation_bytes + extra > \
+                    self.device_budget_bytes:
+                return                       # head-of-line waits; keep FIFO
+            self.pending.pop(0)
+            held = self.executor.acquire(job.handle)
+            self.metrics.hold_bytes(held)
+            job.state = RUNNING
+            job.metrics.admitted_s = time.perf_counter()
+            job.cp = cp_als_init(job.handle.dims, job.rank,
+                                 norm_x=job.handle.norm_x, tol=job.tol,
+                                 seed=job.seed)
+            job.mttkrp_fn = self._make_mttkrp_fn(job)
+            self.active.append(job.job_id)
+            self.metrics.jobs_admitted += 1
+            admitted_any = True
+
+    def _make_mttkrp_fn(self, job: Job) -> Callable:
+        def fn(factors, mode):
+            return self.executor.mttkrp(job.handle, factors, mode,
+                                        stats=job.metrics.stream)
+        return fn
+
+    def _retire(self, job: Job, state: str, error: str | None = None) -> None:
+        job.state = state
+        job.error = error
+        job.metrics.completed_s = time.perf_counter()
+        self.active.remove(job.job_id)
+        freed = self.executor.release(job.handle)
+        self.metrics.hold_bytes(-freed)
+        if state == FAILED:
+            self.metrics.jobs_failed += 1
+        else:
+            self.metrics.jobs_completed += 1
+        self.metrics.h2d_bytes_total += job.metrics.stream.h2d_bytes
+        self.metrics.launches_total += job.metrics.stream.launches
+        self._admit()
+
+    # ------------------------------------------------------------- stepping
+    def step(self) -> bool:
+        """One scheduling cycle: one ALS sweep per active job, round-robin.
+
+        Returns True while any job is active or queued.
+        """
+        for job_id in list(self.active):
+            job = self.jobs[job_id]
+            try:
+                cp_als_step(job.mttkrp_fn, job.cp)
+            except Exception as exc:          # noqa: BLE001 — job isolation:
+                self._retire(job, FAILED, error=repr(exc))
+                continue                      # one bad tensor must not take
+            self.trace.append(job_id)         # down the other tenants
+            job.metrics.iterations = job.cp.iteration
+            self.metrics.iterations_total += 1
+            if job.cp.converged or job.cp.iteration >= job.iters:
+                self._retire(job, DONE)
+        return bool(self.active or self.pending)
+
+    def run(self) -> None:
+        """Synchronous driver: cycle until every submitted job retires."""
+        while self.step():
+            pass

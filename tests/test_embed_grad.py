@@ -2,9 +2,12 @@
 import numpy as np
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+
+from conftest import hypothesis_or_stub
 
 from repro.core import embedding_lookup
+
+given, settings, st = hypothesis_or_stub()
 
 
 @settings(max_examples=25, deadline=None)

@@ -1,9 +1,12 @@
 """Property tests for ALTO linearization + BLCO re-encoding/blocking."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from conftest import hypothesis_or_stub
 
 from repro.core import linearize as lin
+
+given, settings, st = hypothesis_or_stub()
 from repro.core import tensor as tz
 from repro.core.blco import build_blco
 from repro.core.u64 import join64, split64

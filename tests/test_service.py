@@ -1,0 +1,196 @@
+"""Multi-tenant decomposition service: registry cache, admission, fair share.
+
+The acceptance scenario: >=3 concurrent jobs on >=2 distinct tensors run
+through the scheduler with (a) a BLCO cache hit on the repeated tensor,
+(b) admitted reservation bytes never exceeding the budget, (c) per-job CP
+factors matching a sequential cp_als run on the same seeds.
+"""
+import numpy as np
+import pytest
+
+from repro import core
+from repro.service import (BuildParams, DecompositionService, MTTKRPQuery,
+                           SubmitDecomposition, TensorRegistry)
+
+BUILD = BuildParams(max_nnz_per_block=256)      # force many launches
+
+
+def _t1(seed=6):
+    return core.random_tensor((30, 22, 14), 1500, seed=seed, dist="powerlaw")
+
+
+def _t2():
+    return core.random_tensor((40, 25, 30), 2000, seed=3, dist="powerlaw")
+
+
+def _norm(t):
+    return float(np.linalg.norm(t.values))
+
+
+def test_acceptance_three_jobs_two_tensors():
+    svc = DecompositionService(device_budget_bytes=64 << 20, queues=3)
+    t1, t2, t1_again = _t1(), _t2(), _t1()
+    assert t1_again is not t1                     # distinct objects, same content
+    j1 = svc.submit(SubmitDecomposition(tensor=t1, rank=6, iters=5, seed=7,
+                                        build=BUILD))
+    j2 = svc.submit(SubmitDecomposition(tensor=t2, rank=8, iters=5, seed=1,
+                                        build=BUILD))
+    j3 = svc.submit(SubmitDecomposition(tensor=t1_again, rank=6, iters=5,
+                                        seed=7, build=BUILD))
+    results = svc.run()
+    assert set(results) == {j1, j2, j3}
+    m = svc.service_metrics()
+    # (a) BLCO cache hit on the repeated tensor
+    assert m["blco_cache_hits"] == 1 and m["blco_cache_misses"] == 2
+    assert svc.status(j3).cache_hit and not svc.status(j1).cache_hit
+    # (b) admitted reservation bytes never exceeded the budget
+    assert 0 < m["peak_admitted_reservation_bytes"] <= 64 << 20
+    assert m["admitted_reservation_bytes"] == 0   # all released at the end
+    # (c) per-job factors match a sequential cp_als on the same seeds
+    for jid, t, rank, seed in ((j1, t1, 6, 7), (j2, t2, 8, 1)):
+        b = core.build_blco(t, max_nnz_per_block=256)
+        ex = core.OOMExecutor(b, queues=3)
+        ref = core.cp_als(lambda f, m_: ex.mttkrp(f, m_), t.dims, rank,
+                          norm_x=_norm(t), iters=5, seed=seed)
+        got = results[jid].result
+        np.testing.assert_allclose(got.fits, ref.fits, rtol=1e-5, atol=1e-6)
+        for a, b_ in zip(got.factors, ref.factors):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                       rtol=1e-4, atol=1e-5)
+    # identical submissions produce identical factors (shared BLCO copy)
+    for a, b_ in zip(results[j1].result.factors, results[j3].result.factors):
+        assert np.array_equal(np.asarray(a), np.asarray(b_))
+
+
+def test_round_robin_iteration_fair_share():
+    svc = DecompositionService(device_budget_bytes=64 << 20, queues=2)
+    ids = [svc.submit(SubmitDecomposition(tensor=_t1(), rank=4, iters=4,
+                                          seed=s, tol=0.0, build=BUILD))
+           for s in range(3)]
+    svc.run()
+    trace = svc.scheduler.trace
+    assert len(trace) == 12                       # 3 jobs x 4 iterations
+    # every scheduling cycle advances each active job exactly once
+    for cycle in range(4):
+        assert trace[cycle * 3:(cycle + 1) * 3] == ids
+
+
+def test_admission_control_respects_budget():
+    # two distinct reservation shapes (256- vs 512-slot); the budget fits
+    # either alone but not both -> the second must queue until the first
+    # job completes and releases its reservation
+    t1, t2 = _t1(), _t2()
+    probe = TensorRegistry()
+    small = probe.register(t1, build=BUILD).spec.bytes_in_flight(2)
+    big = probe.register(
+        t2, build=BuildParams(max_nnz_per_block=512)).spec.bytes_in_flight(2)
+    assert small < big
+    svc = DecompositionService(device_budget_bytes=big, queues=2)
+    j1 = svc.submit(SubmitDecomposition(tensor=t1, rank=4, iters=3, seed=0,
+                                        build=BUILD))
+    j2 = svc.submit(SubmitDecomposition(
+        tensor=t2, rank=4, iters=3, seed=0,
+        build=BuildParams(max_nnz_per_block=512)))
+    assert svc.status(j1).state == "running"
+    assert svc.status(j2).state == "queued"       # over budget: must wait
+    assert svc.status(j2).queue_wait_s >= 0.0
+    svc.run()
+    m = svc.service_metrics()
+    assert svc.status(j1).state == "done" and svc.status(j2).state == "done"
+    assert m["peak_admitted_reservation_bytes"] <= big
+
+
+def test_same_shape_tenants_share_one_reservation():
+    """Jobs padding to one ReservationSpec charge the budget once (pooling)."""
+    svc = DecompositionService(device_budget_bytes=64 << 20, queues=2)
+    for s in range(3):                            # same tensor content 3x
+        svc.submit(SubmitDecomposition(tensor=_t1(), rank=4, iters=2, seed=s,
+                                       build=BUILD))
+    assert svc.executor.pool_size == 1            # one pooled shape
+    one = svc.scheduler.jobs[0].handle.spec.bytes_in_flight(2)
+    assert svc.service_metrics()["admitted_reservation_bytes"] == one
+    svc.run()
+    assert svc.service_metrics()["peak_admitted_reservation_bytes"] == one
+
+
+def test_oversized_job_rejected_at_submit():
+    svc = DecompositionService(device_budget_bytes=1024, queues=4)
+    with pytest.raises(ValueError, match="can never be admitted"):
+        svc.submit(SubmitDecomposition(tensor=_t1(), rank=4, build=BUILD))
+
+
+def test_registry_fingerprint_semantics():
+    reg = TensorRegistry()
+    h1 = reg.register(_t1(), build=BUILD)
+    h2 = reg.register(_t1(), build=BUILD)         # same content -> hit
+    assert h1 is h2 and reg.hits == 1 and reg.misses == 1
+    h3 = reg.register(_t1(), build=BuildParams(max_nnz_per_block=512))
+    assert h3 is not h1 and reg.misses == 2       # build params change -> miss
+    t_other = _t1(seed=7)
+    h4 = reg.register(t_other, build=BUILD)       # different content -> miss
+    assert h4 is not h1 and reg.misses == 3
+    assert len(reg) == 3 and reg.host_bytes() > 0
+    assert reg.evict(h3.key) and len(reg) == 2
+
+
+def test_mttkrp_query_matches_in_memory():
+    svc = DecompositionService(device_budget_bytes=64 << 20, queues=3)
+    t = _t1()
+    rng = np.random.default_rng(0)
+    factors = [rng.standard_normal((d, 8)).astype(np.float32) for d in t.dims]
+    b = core.build_blco(t, max_nnz_per_block=256)
+    for mode in range(t.order):
+        got = svc.mttkrp(MTTKRPQuery(tensor=t, factors=factors, mode=mode,
+                                     build=BUILD))
+        ref = core.mttkrp(b, factors, mode)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+    # all three queries + any later job reuse one cached BLCO build
+    assert svc.registry.misses == 1 and svc.registry.hits == 2
+
+
+def test_failed_job_isolated_and_reservation_released():
+    svc = DecompositionService(device_budget_bytes=64 << 20, queues=2)
+    good = svc.submit(SubmitDecomposition(tensor=_t1(), rank=4, iters=3,
+                                          seed=0, build=BUILD))
+    bad = svc.submit(SubmitDecomposition(tensor=_t2(), rank=4, iters=3,
+                                         seed=0, build=BUILD))
+    svc.scheduler.jobs[bad].mttkrp_fn = \
+        lambda f, m: (_ for _ in ()).throw(RuntimeError("boom"))
+    svc.run()
+    assert svc.status(bad).state == "failed"
+    assert "boom" in svc.status(bad).error
+    assert svc.status(good).state == "done"       # unaffected tenant
+    m = svc.service_metrics()
+    assert m["admitted_reservation_bytes"] == 0
+    assert m["jobs_failed"] == 1 and m["jobs_completed"] == 1
+
+
+def test_mttkrp_query_obeys_budget():
+    """One-shot queries charge the same admission budget as jobs."""
+    t = _t1()
+    factors = [np.zeros((d, 4), np.float32) for d in t.dims]
+    svc = DecompositionService(device_budget_bytes=1024, queues=4)
+    with pytest.raises(ValueError, match="does not fit the device budget"):
+        svc.mttkrp(MTTKRPQuery(tensor=t, factors=factors, mode=0, build=BUILD))
+    assert svc.executor.pool_size == 0            # nothing leaked
+    assert svc.service_metrics()["admitted_reservation_bytes"] == 0
+    with pytest.raises(ValueError, match="out of range"):
+        DecompositionService().mttkrp(
+            MTTKRPQuery(tensor=t, factors=factors, mode=7, build=BUILD))
+
+
+def test_resumable_stepper_matches_one_shot():
+    """cp_als == a loop of cp_als_step over CPState (the scheduler contract)."""
+    t = _t1()
+    b = core.build_blco(t)
+    fn = lambda f, m: core.mttkrp(b, f, m)        # noqa: E731
+    ref = core.cp_als(fn, t.dims, 5, norm_x=_norm(t), iters=6, seed=2)
+    state = core.cp_als_init(t.dims, 5, norm_x=_norm(t), seed=2)
+    for _ in range(6):
+        core.cp_als_step(fn, state)
+        if state.converged:
+            break
+    assert state.fits == ref.fits
+    for a, b_ in zip(state.factors, ref.factors):
+        assert np.array_equal(np.asarray(a), np.asarray(b_))

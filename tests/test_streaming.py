@@ -1,0 +1,68 @@
+"""OOMExecutor edge cases: zero-nnz, exact-fit reservations, byte accounting."""
+import numpy as np
+import pytest
+
+from repro import core
+from repro.core.streaming import ReservationSpec, prepare_chunks
+
+
+def _factors(dims, rank, seed=0):
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    return [jnp.asarray(rng.standard_normal((d, rank)).astype(np.float32))
+            for d in dims]
+
+
+def test_zero_nnz_tensor():
+    t = core.from_coo(np.zeros((0, 3), np.int64), np.zeros((0,), np.float32),
+                      (8, 6, 4))
+    assert t.nnz == 0
+    b = core.build_blco(t)
+    assert b.launches == [] and b.blocks == []
+    ex = core.OOMExecutor(b, queues=2)
+    out = np.asarray(ex.mttkrp(_factors(t.dims, 5), 0))
+    assert out.shape == (8, 5)
+    np.testing.assert_array_equal(out, 0.0)
+    assert ex.stats.launches == 0 and ex.stats.h2d_bytes == 0
+
+
+def test_launch_exactly_at_reservation_size():
+    t = core.random_tensor((20, 16, 12), 3000, seed=1)
+    b = core.build_blco(t, max_nnz_per_block=128)
+    max_launch = max(l.nnz for l in b.launches)
+    ex = core.OOMExecutor(b, queues=2, reservation_nnz=max_launch)
+    assert ex.reservation == max_launch           # no pow2 rounding up
+    out = np.asarray(ex.mttkrp(_factors(t.dims, 6), 1), np.float64)
+    oracle = core.mttkrp_dense_oracle(t, _factors(t.dims, 6), 1)
+    rel = np.max(np.abs(out - oracle)) / (np.max(np.abs(oracle)) + 1e-30)
+    assert rel < 1e-3
+    # a reservation below the largest launch must be rejected up front
+    with pytest.raises(ValueError, match="reservation smaller"):
+        core.OOMExecutor(b, queues=2, reservation_nnz=max_launch - 1)
+    with pytest.raises(ValueError, match="exceeds reservation"):
+        prepare_chunks(b, max_launch - 1)
+
+
+def test_stream_stats_byte_accounting():
+    t = core.random_tensor((25, 18, 21), 1200, seed=4)
+    b = core.build_blco(t, max_nnz_per_block=128)
+    ex = core.OOMExecutor(b, queues=3)
+    factors = _factors(t.dims, 4)
+    ex.mttkrp(factors, 0)
+    n_launches = len(b.launches)
+    assert ex.stats.launches == n_launches
+    # every launch moves exactly one reservation: hi + lo + vals + bases
+    per_launch = ex.spec.bytes_per_launch
+    assert per_launch == ex.reservation * (4 + 4 + 4 + 4 * t.order)
+    assert ex.stats.h2d_bytes == n_launches * per_launch
+    # stats accumulate across calls (per-executor lifetime accounting)
+    ex.mttkrp(factors, 2)
+    assert ex.stats.launches == 2 * n_launches
+    assert ex.stats.h2d_bytes == 2 * n_launches * per_launch
+    assert ex.stats.total_time_s > 0 and ex.stats.compute_time_s > 0
+
+
+def test_reservation_spec_bytes():
+    spec = ReservationSpec(nnz=256, order=4, value_itemsize=4)
+    assert spec.bytes_per_launch == 256 * (4 + 4 + 4 + 16)
+    assert spec.bytes_in_flight(4) == 4 * spec.bytes_per_launch

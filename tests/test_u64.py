@@ -1,8 +1,11 @@
 """u64-as-2xu32 arithmetic vs Python big ints (hypothesis)."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+from conftest import hypothesis_or_stub
 
 from repro.core import u64
+
+given, settings, st = hypothesis_or_stub()
 
 
 @settings(max_examples=60, deadline=None)

@@ -51,15 +51,17 @@ def _factors(t, seed=0):
 
 
 def _formats(t):
-    """Device-resident formats (paper's in-memory regime: the tensor stays
-    in device memory across CP-ALS iterations; only factors change)."""
-    from repro.core.baselines import DeviceCOO, DeviceCSF, DeviceFCOO
-    from repro.core.mttkrp import DeviceBLCO
+    """Device-resident ExecutionPlans (paper's in-memory regime: the tensor
+    stays in device memory across CP-ALS iterations; only factors change).
+    Every format — BLCO and baselines — goes through the one engine API."""
+    from repro.engine import plan_for
+    b = core.build_blco(t)
+    budget = 1 << 40                      # in-memory benchmarking: no limit
     return {
-        "blco": DeviceBLCO(core.build_blco(t)),
-        "coo": DeviceCOO(core.COOFormat.build(t)),
-        "fcoo": DeviceFCOO(core.FCOOFormat.build(t)),
-        "csf": DeviceCSF(core.CSFFormat.build(t)),
+        "blco": plan_for(b, budget, rank=RANK, backend="in_memory"),
+        "coo": plan_for(b, budget, rank=RANK, backend="coo", tensor=t),
+        "fcoo": plan_for(b, budget, rank=RANK, backend="fcoo", tensor=t),
+        "csf": plan_for(b, budget, rank=RANK, backend="csf", tensor=t),
     }
 
 
@@ -133,25 +135,30 @@ def bench_table3(rows):
 
 
 def bench_fig10(rows):
-    from repro.core.mttkrp import DeviceBLCO
+    from repro.engine import plan_for
     t = core.paper_like("amazon-like", seed=0)
     b = core.build_blco(t, max_nnz_per_block=1 << 14)
     factors = _factors(t)
-    dev = DeviceBLCO(b)
+    dev = plan_for(b, 1 << 40, rank=RANK, backend="in_memory")
     in_mem = _time(lambda: dev.mttkrp(factors, 0))
-    ex = core.OOMExecutor(b, queues=4)
-    ex.stats.__init__()
+    stream = plan_for(b, 1 << 40, rank=RANK, backend="streamed", queues=4)
     t0 = time.perf_counter()
-    ex.mttkrp(factors, 0)
+    stream.mttkrp(factors, 0)
     overall = time.perf_counter() - t0
-    nnz_bytes = b.idx_hi.nbytes + b.idx_lo.nbytes + b.values.nbytes
+    nnz_bytes = core.format_bytes(b)
+    s = stream.stats()
     rows.append(("fig10.amazon-like.in_memory", in_mem * 1e6,
                  f"{nnz_bytes/in_mem/1e9:.2f}GB/s"))
     rows.append(("fig10.amazon-like.oom_overall", overall * 1e6,
                  f"{nnz_bytes/overall/1e9:.2f}GB/s "
                  f"({in_mem/overall*100:.0f}% of in-mem)"))
     rows.append(("fig10.amazon-like.h2d_bytes", 0.0,
-                 f"{ex.stats.h2d_bytes/1e6:.1f}MB"))
+                 f"{s.h2d_bytes/1e6:.1f}MB"))
+    rows.append(("fig10.amazon-like.put_vs_device", s.put_time_s * 1e6,
+                 f"device={s.device_time_s*1e6:.0f}us "
+                 f"dispatch={s.dispatch_time_s*1e6:.0f}us"))
+    dev.close()
+    stream.close()
 
 
 def bench_fig11_fig12(rows):

@@ -1,10 +1,15 @@
 """Quickstart: decompose a sparse tensor with BLCO-based CP-ALS.
 
+The engine API is the one front door: ``plan_for`` picks the execution
+regime (device-resident vs streamed) for your device budget, and the plan
+goes straight into ``cp_als``.
+
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
 from repro import core
+from repro.engine import plan_for
 
 # a 4-order sparse tensor with skewed fiber density (paper's hard regime)
 t = core.random_tensor((500, 120, 80, 40), 200_000, seed=0, dist="powerlaw")
@@ -17,10 +22,17 @@ print(f"BLCO: {len(b.blocks)} block(s), {len(b.launches)} launch(es), "
       f"{core.format_bytes(b)/1e6:.1f} MB device-resident")
 print(f"construction: { {k: f'{v*1e3:.1f}ms' for k, v in b.construction_stats.items()} }")
 
+# plan execution under a 1 GiB device budget -> in-memory regime here
+plan = plan_for(b, 1 << 30, rank=16)
+print(f"engine chose backend={plan.backend!r} "
+      f"({plan.device_bytes()/1e6:.1f} MB resident)")
+
 # rank-16 CP decomposition via CP-ALS (Algorithm 1 of the paper)
-res = core.cp_als(lambda f, m: core.mttkrp(b, f, m), t.dims, rank=16,
+res = core.cp_als(plan, t.dims, rank=16,
                   norm_x=float(np.linalg.norm(t.values)), iters=15, seed=1)
 for i, fit in enumerate(res.fits, 1):
     print(f"iter {i:2d}  fit {fit:.4f}")
 print(f"converged={res.converged} after {res.iterations} iterations")
 print("lambda:", np.round(res.lam[:8], 3), "...")
+print(f"engine stats: {plan.stats().snapshot()}")
+plan.close()

@@ -1,20 +1,23 @@
-"""Multi-tenant tensor-decomposition service demo.
+"""Multi-tenant tensor-decomposition service demo — mixed execution regimes.
 
 Four CP-ALS jobs from three tenants on two distinct tensors share one
-device through the service layer:
+device through the service layer, under ONE measured byte budget:
 
-* the repeated tensor is a BLCO construction-cache hit (one shared copy);
-* admission control keeps the sum of pooled reservation bytes under a
-  device budget (the paper's §4.2 memory constraint, multi-tenant);
-* the scheduler round-robins CP-ALS iterations so every tenant advances
-  each cycle;
-* results are bit-identical to a solo sequential run on the same seeds.
+* the engine gives the small repeated tensor the **device-resident fast
+  path** (one pooled DeviceBLCO copy, zero per-iteration H2D) while the
+  larger tensor **streams** through pooled fixed reservations;
+* the repeated tensor is a BLCO construction-cache hit (one shared copy)
+  AND a residency-pool hit (its second tenant is admitted for 0 bytes);
+* admission charges exactly ``plan.device_bytes()`` — measured, not a
+  padded worst case;
+* results are bit-identical to a solo run through the same engine regime.
 
     PYTHONPATH=src python examples/serve_td.py
 """
 import numpy as np
 
 from repro import core
+from repro.engine import factor_bytes, in_memory_bytes, plan_for
 from repro.service import BuildParams, DecompositionService, SubmitDecomposition
 
 build = BuildParams(max_nnz_per_block=1 << 12)   # small blocks -> real streaming
@@ -22,7 +25,20 @@ t_uber = core.paper_like("uber-like", seed=0)
 t_chicago = core.paper_like("chicago-like", seed=0)
 t_uber_again = core.paper_like("uber-like", seed=0)   # same content, new object
 
-svc = DecompositionService(device_budget_bytes=8 << 20, queues=4)
+# size the budget so uber fits device-resident but chicago must stream:
+# uber's resident copy + the factor working set + one pooled reservation
+# set for chicago, with headroom well below chicago's residency cost
+from repro.core.streaming import reservation_for
+
+b_uber = core.build_blco(t_uber, max_nnz_per_block=1 << 12)
+b_chicago = core.build_blco(t_chicago, max_nnz_per_block=1 << 12)
+chicago_stream = reservation_for(b_chicago).bytes_in_flight(4)
+headroom = chicago_stream + (128 << 10)
+assert headroom < in_memory_bytes(b_chicago)   # chicago can never go resident
+assert headroom >= factor_bytes(t_uber.dims, 16, np.float32)  # uber can
+budget = in_memory_bytes(b_uber) + headroom
+
+svc = DecompositionService(device_budget_bytes=budget, queues=4)
 jobs = {
     "tenantA/uber":     svc.submit(SubmitDecomposition(
         tensor=t_uber, rank=16, iters=6, seed=1, build=build)),
@@ -34,8 +50,7 @@ jobs = {
         tensor=t_chicago, rank=8, iters=6, seed=3, build=build)),
 }
 print(f"submitted {len(jobs)} jobs on 2 distinct tensors "
-      f"(budget {svc.scheduler.device_budget_bytes >> 20} MiB, "
-      f"{svc.executor.queues} queues)")
+      f"(budget {budget/1e6:.1f} MB, {svc.engine.queues} queues)")
 
 results = svc.run()
 m = svc.service_metrics()
@@ -43,29 +58,35 @@ m = svc.service_metrics()
 for name, jid in jobs.items():
     st = svc.status(jid)
     r = results[jid]
-    print(f"  {name:18s} job={jid} {st.state} iters={st.iteration} "
-          f"fit={st.fit:.4f} cache_hit={st.cache_hit} "
+    print(f"  {name:18s} job={jid} {st.state} backend={st.backend:9s} "
+          f"iters={st.iteration} fit={st.fit:.4f} cache_hit={st.cache_hit} "
           f"h2d={r.metrics['h2d_bytes']/1e6:.1f}MB "
           f"launches={r.metrics['launches']}")
 
+backends = {name: svc.status(jid).backend for name, jid in jobs.items()}
+assert backends["tenantA/uber"] == "in_memory"       # fast path
+assert backends["tenantC/uber"] == "in_memory"       # pooled residency
+assert backends["tenantB/chicago"] == "streamed"     # too big -> streams
+assert backends["tenantB/chicago8"] == "streamed"
+
 print(f"service: {m['blco_cache_hits']} cache hit(s) / "
       f"{m['blco_cache_misses']} build(s); "
-      f"pooled-reservation peak {m['peak_admitted_reservation_bytes']/1e6:.2f}MB "
+      f"measured admission peak {m['peak_admitted_reservation_bytes']/1e6:.2f}MB "
       f"<= budget; {m['iterations_total']} iterations "
       f"({m['iterations_per_sec']:.2f}/s); "
       f"{m['h2d_bytes_total']/1e6:.1f}MB H2D total")
-assert m["peak_admitted_reservation_bytes"] <= svc.scheduler.device_budget_bytes
+assert m["peak_admitted_reservation_bytes"] <= budget
 assert m["blco_cache_hits"] == 2       # repeated uber content + reused chicago
 assert m["blco_cache_misses"] == 2     # one build per distinct tensor
 
-# the multi-tenant result is exactly the solo result on the same seeds
+# the multi-tenant result is exactly the solo result through the same regime
 jid = jobs["tenantA/uber"]
-b = core.build_blco(t_uber, max_nnz_per_block=1 << 12)
-ex = core.OOMExecutor(b, queues=4)
-solo = core.cp_als(lambda f, mm: ex.mttkrp(f, mm), t_uber.dims, 16,
+solo_plan = plan_for(b_uber, budget, rank=16, backend="in_memory")
+solo = core.cp_als(solo_plan, t_uber.dims, 16,
                    norm_x=float(np.linalg.norm(t_uber.values)),
                    iters=6, seed=1)
 for a, b_ in zip(results[jid].result.factors, solo.factors):
     np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
                                rtol=1e-5, atol=1e-6)
-print("multi-tenant factors == solo sequential factors (same seeds): OK")
+solo_plan.close()
+print("multi-tenant factors == solo engine factors (same seeds): OK")

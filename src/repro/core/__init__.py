@@ -1,22 +1,25 @@
 """Core library: the paper's contribution (BLCO format + mode-agnostic MTTKRP
 + OOM streaming + CP-ALS) and its baselines."""
 from .tensor import SparseTensor, random_tensor, from_coo, load_tns, paper_like
-from .blco import BLCOTensor, build_blco, format_bytes
-from .mttkrp import mttkrp, choose_resolution, mttkrp_dense_oracle, khatri_rao
+from .blco import BLCOTensor, build_blco, decode_coords, format_bytes
+from .mttkrp import (mttkrp, choose_resolution, mttkrp_dense_oracle,
+                     khatri_rao, DeviceBLCO)
 from .baselines import (COOFormat, coo_mttkrp, FCOOFormat, fcoo_mttkrp,
                         CSFFormat, csf_mttkrp)
-from .cp_als import (cp_als, cp_als_init, cp_als_step, CPResult, CPState,
-                     init_factors, reconstruct_dense)
-from .streaming import OOMExecutor, ReservationSpec, StreamStats
+from .cp_als import (cp_als, cp_als_init, cp_als_step, as_mttkrp_fn, CPResult,
+                     CPState, init_factors, reconstruct_dense)
+from .streaming import EngineStats, OOMExecutor, ReservationSpec, StreamStats
 from .embed_grad import embedding_lookup
 
 __all__ = [
     "SparseTensor", "random_tensor", "from_coo", "load_tns", "paper_like",
-    "BLCOTensor", "build_blco", "format_bytes",
+    "BLCOTensor", "build_blco", "decode_coords", "format_bytes",
     "mttkrp", "choose_resolution", "mttkrp_dense_oracle", "khatri_rao",
+    "DeviceBLCO",
     "COOFormat", "coo_mttkrp", "FCOOFormat", "fcoo_mttkrp",
     "CSFFormat", "csf_mttkrp",
-    "cp_als", "cp_als_init", "cp_als_step", "CPResult", "CPState",
-    "init_factors", "reconstruct_dense",
-    "OOMExecutor", "ReservationSpec", "StreamStats", "embedding_lookup",
+    "cp_als", "cp_als_init", "cp_als_step", "as_mttkrp_fn", "CPResult",
+    "CPState", "init_factors", "reconstruct_dense",
+    "EngineStats", "OOMExecutor", "ReservationSpec", "StreamStats",
+    "embedding_lookup",
 ]

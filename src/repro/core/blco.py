@@ -161,5 +161,33 @@ def build_blco(t: SparseTensor, *, target_bits: int = 64,
 
 
 def format_bytes(b: BLCOTensor) -> int:
-    """Device-resident bytes of the format (for Table-3-style analysis)."""
-    return int(b.idx_hi.nbytes + b.idx_lo.nbytes + b.values.nbytes)
+    """True device-resident bytes of the format (Table-3-style analysis).
+
+    Counts everything an in-memory MTTKRP keeps on the device per element:
+    the two uint32 index words, the value, AND the per-element int32 block
+    coordinate bases (order words wide).  This matches
+    ``ReservationSpec.bytes_per_launch`` per nnz slot, so the streaming and
+    in-memory regimes account device bytes identically.
+    """
+    bases_bytes = 4 * b.order * b.nnz
+    return int(b.idx_hi.nbytes + b.idx_lo.nbytes + b.values.nbytes
+               + bases_bytes)
+
+
+def decode_coords(b: BLCOTensor) -> np.ndarray:
+    """Recover the (nnz, N) original coordinates from the stored encoding.
+
+    Host-side inverse of the ALTO re-encode: extract each mode's field from
+    the 64-bit stored index and add the per-block upper-bit base.  Rows are
+    in BLCO (ALTO-sorted) order, matching ``b.values``.
+    """
+    stored = (b.idx_hi.astype(np.uint64) << np.uint64(32)) \
+        | b.idx_lo.astype(np.uint64)
+    bases = b.block_upper_bases()[b.element_block_ids()] if b.nnz else \
+        np.zeros((0, b.order), np.int64)
+    coords = np.empty((b.nnz, b.order), np.int64)
+    for n, (shift, width) in enumerate(zip(b.re.field_shift, b.re.field_bits)):
+        mask = (1 << width) - 1
+        field = (stored >> np.uint64(shift)).astype(np.int64) & mask
+        coords[:, n] = field + bases[:, n]
+    return coords

@@ -1,8 +1,13 @@
 """CP-ALS (paper Algorithm 1) on top of any MTTKRP backend.
 
-The MTTKRP backend is a callable ``(factors, mode) -> M`` so the same driver
-runs over BLCO (in-memory or streaming/OOM), COO, F-COO, CSF, or the Pallas
-kernel path — mirroring how the paper swaps formats under one algorithm.
+The MTTKRP backend is either a bare callable ``(factors, mode) -> M`` or any
+object exposing ``.mttkrp(factors, mode)`` — in particular an
+``repro.engine.ExecutionPlan`` (the unified engine API), but also the legacy
+``DeviceBLCO`` / ``OOMExecutor`` wrappers.  ``as_mttkrp_fn`` is the adapter;
+every driver below resolves its backend through it, so the same algorithm
+runs over BLCO (in-memory or streaming/OOM), COO, F-COO, CSF, sharded, or
+the Pallas kernel path — mirroring how the paper swaps formats under one
+algorithm.
 
 The algorithm is exposed at two granularities:
 
@@ -51,6 +56,24 @@ class CPState:
                         iterations=self.iteration)
 
 
+def as_mttkrp_fn(backend):
+    """Adapt an engine/plan-or-callable MTTKRP backend to ``(factors, mode)``.
+
+    Accepts (in priority order) any object with an ``mttkrp(factors, mode)``
+    method — an ``ExecutionPlan``, ``DeviceBLCO``, ``OOMExecutor``, baseline
+    device format — or a bare callable.  Bare callables pass through
+    untouched, keeping the original ``cp_als(lambda f, m: ...)`` form intact.
+    """
+    method = getattr(backend, "mttkrp", None)
+    if method is not None and callable(method):
+        return method
+    if callable(backend):
+        return backend
+    raise TypeError(
+        f"MTTKRP backend must be a callable (factors, mode) -> M or expose "
+        f".mttkrp(factors, mode); got {type(backend).__name__}")
+
+
 def init_factors(dims, rank, *, seed=0, dtype=jnp.float32):
     rng = np.random.default_rng(seed)
     return [jnp.asarray(rng.standard_normal((d, rank)), dtype=dtype) for d in dims]
@@ -74,11 +97,13 @@ def cp_als_init(dims, rank, *, norm_x: float, tol: float = 1e-5,
 def cp_als_step(mttkrp_fn, state: CPState) -> CPState:
     """One full ALS sweep (all modes, Alg. 1 lines 2-6) + fit update, in place.
 
-    mttkrp_fn(factors, mode) must return the (I_mode, R) MTTKRP result.
+    ``mttkrp_fn`` is an engine plan, any ``.mttkrp``-bearing backend, or a
+    bare callable returning the (I_mode, R) MTTKRP result (``as_mttkrp_fn``).
     Returns ``state`` for chaining; a converged state is returned unchanged.
     """
     if state.converged:
         return state
+    mttkrp_fn = as_mttkrp_fn(mttkrp_fn)
     n_modes = len(state.dims)
     rank = state.rank
     dtype = state.factors[0].dtype
@@ -121,9 +146,11 @@ def cp_als(mttkrp_fn, dims, rank, *, norm_x: float, iters: int = 25,
            factors=None) -> CPResult:
     """Alternating least squares for rank-R CPD (one-shot driver).
 
-    mttkrp_fn(factors, mode) must return the (I_mode, R) MTTKRP result.
+    ``mttkrp_fn``: an engine plan / ``.mttkrp``-bearing backend or a bare
+    callable (factors, mode) -> (I_mode, R) — see ``as_mttkrp_fn``.
     norm_x: Frobenius norm of the sparse tensor (sum of squared values)**0.5.
     """
+    mttkrp_fn = as_mttkrp_fn(mttkrp_fn)
     state = cp_als_init(dims, rank, norm_x=norm_x, tol=tol, seed=seed,
                         dtype=dtype, factors=factors)
     for _ in range(iters):

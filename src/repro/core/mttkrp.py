@@ -184,16 +184,29 @@ class DeviceBLCO:
         self.order = blco.order
 
     def device_bytes(self) -> int:
-        return int(self.idx_hi.nbytes + self.idx_lo.nbytes + self.vals.nbytes)
+        """Exact device footprint: hi + lo + vals + bases (padded)."""
+        return int(self.idx_hi.nbytes + self.idx_lo.nbytes + self.vals.nbytes
+                   + self.bases.nbytes)
 
     def mttkrp(self, factors, mode: int, *, resolution: str = "auto",
                copies: int = DEFAULT_COPIES):
         if resolution == "auto":
             resolution = choose_resolution(self.dims[mode])
+        if self.idx_hi.shape[0] == 0:
+            rank = factors[0].shape[1]
+            return jnp.zeros((self.dims[mode], rank), factors[0].dtype)
         return launch_mttkrp(
             self.idx_hi, self.idx_lo, self.vals, self.bases, tuple(factors),
             re_fields=self.re_fields, re_shifts=self.re_shifts, mode=mode,
             out_rows=self.dims[mode], resolution=resolution, copies=copies)
+
+    def delete(self) -> None:
+        """Release the device buffers (the arrays must not be used after)."""
+        for arr in (self.idx_hi, self.idx_lo, self.vals, self.bases):
+            try:
+                arr.delete()
+            except Exception:   # already deleted / backend without delete()
+                pass
 
 
 # --------------------------------------------------------------------- oracle

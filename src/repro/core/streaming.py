@@ -23,6 +23,11 @@ set of reservation shapes, reusing the same compiled executables.
 
 ``OOMExecutor.stats`` records bytes moved and per-phase wall time so the
 Fig.-10 style benchmark can report overall vs in-memory throughput.
+
+``repro.engine`` is the unified front door over this module: a
+``StreamedPlan`` owns the reservation + chunks + an ``EngineStats`` and is
+the one public way to execute a streamed MTTKRP; ``OOMExecutor`` remains as
+the thin single-tensor convenience wrapper.
 """
 from __future__ import annotations
 
@@ -38,12 +43,45 @@ from .mttkrp import launch_mttkrp, choose_resolution, DEFAULT_COPIES
 
 
 @dataclasses.dataclass
-class StreamStats:
+class EngineStats:
+    """Unified per-plan execution counters (every engine backend fills one).
+
+    Timing is split so async dispatch is never mistaken for device compute:
+    ``dispatch_time_s`` is the host wall time spent issuing (possibly async)
+    compute calls; ``device_time_s`` is the fenced span from the first compute
+    dispatch of a call until ``block_until_ready()`` returns, i.e. it includes
+    the actual device execution.  ``compute_time_s`` is kept as a deprecated
+    read-only alias of ``device_time_s`` for pre-engine callers.
+    """
+    backend: str = ""
+    mttkrp_calls: int = 0
     h2d_bytes: int = 0
     launches: int = 0
     put_time_s: float = 0.0
-    compute_time_s: float = 0.0
+    dispatch_time_s: float = 0.0
+    device_time_s: float = 0.0
     total_time_s: float = 0.0
+
+    @property
+    def compute_time_s(self) -> float:
+        return self.device_time_s
+
+    def snapshot(self) -> dict:
+        return {
+            "backend": self.backend,
+            "mttkrp_calls": self.mttkrp_calls,
+            "h2d_bytes": self.h2d_bytes,
+            "launches": self.launches,
+            "put_time_s": self.put_time_s,
+            "dispatch_time_s": self.dispatch_time_s,
+            "device_time_s": self.device_time_s,
+            "total_time_s": self.total_time_s,
+        }
+
+
+# Deprecated name: the streaming layer's ad-hoc stats object predates the
+# unified engine API; all backends now share EngineStats.
+StreamStats = EngineStats
 
 
 @dataclasses.dataclass(frozen=True)
@@ -124,6 +162,7 @@ def stream_mttkrp(chunks, blco: BLCOTensor, factors, mode: int, *,
 
     t_start = time.perf_counter()
     in_flight: list[tuple] = []
+    t_first_dispatch: float | None = None
 
     def _issue(chunk):
         t0 = time.perf_counter()
@@ -135,15 +174,18 @@ def stream_mttkrp(chunks, blco: BLCOTensor, factors, mode: int, *,
         return dev
 
     def _consume(dev):
-        nonlocal out
+        nonlocal out, t_first_dispatch
         t0 = time.perf_counter()
+        if t_first_dispatch is None:
+            t_first_dispatch = t0
         hi, lo, vals, bases = dev
         out = out + launch_mttkrp(
             hi, lo, vals, bases, factors,
             re_fields=b.re.field_bits, re_shifts=b.re.field_shift,
             mode=mode, out_rows=b.dims[mode],
             resolution=resolution, copies=copies)
-        stats.compute_time_s += time.perf_counter() - t0
+        # host wall time of the (async) dispatch only — NOT device compute
+        stats.dispatch_time_s += time.perf_counter() - t0
         stats.launches += 1
 
     for chunk in chunks:
@@ -154,7 +196,12 @@ def stream_mttkrp(chunks, blco: BLCOTensor, factors, mode: int, *,
     while in_flight:
         _consume(in_flight.pop(0))
     out.block_until_ready()
-    stats.total_time_s += time.perf_counter() - t_start
+    t_end = time.perf_counter()
+    if t_first_dispatch is not None:
+        # fenced: first dispatch -> all launches retired on device
+        stats.device_time_s += t_end - t_first_dispatch
+    stats.mttkrp_calls += 1
+    stats.total_time_s += t_end - t_start
     return out
 
 
@@ -167,7 +214,7 @@ class OOMExecutor:
         self.queues = queues
         self.spec = reservation_for(blco, reservation_nnz)
         self._prepared = prepare_chunks(blco, self.spec.nnz)
-        self.stats = StreamStats()
+        self.stats = EngineStats(backend="streamed")
 
     @property
     def reservation(self) -> int:

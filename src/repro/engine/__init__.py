@@ -1,0 +1,26 @@
+"""Unified MTTKRP engine: one ExecutionPlan API across every regime.
+
+    from repro.engine import plan_for
+    plan = plan_for(build_blco(t), device_budget_bytes=1 << 30, rank=16)
+    out = plan.mttkrp(factors, mode)        # the one way to run an MTTKRP
+    plan.device_bytes(); plan.stats(); plan.close()
+
+Backends: InMemoryPlan (device-resident), StreamedPlan (out-of-memory,
+fixed reservations), ShardedPlan (mesh scale-out), BaselinePlan
+(COO/F-COO/CSF parity).  ``plan_for`` implements the paper's regime
+decision; the ``MTTKRPEngine``/``ExecutionPlan`` protocols let higher
+layers (the multi-tenant service) substitute pooled variants.
+"""
+from repro.core.streaming import EngineStats
+
+from .api import ExecutionPlan, MTTKRPEngine, factor_bytes, in_memory_bytes
+from .plans import (BASELINE_KINDS, BaselinePlan, InMemoryPlan, ShardedPlan,
+                    StreamedPlan, sharded_bytes)
+from .select import AUTO_BACKENDS, DefaultEngine, plan_for
+
+__all__ = [
+    "EngineStats", "ExecutionPlan", "MTTKRPEngine",
+    "factor_bytes", "in_memory_bytes", "sharded_bytes",
+    "InMemoryPlan", "StreamedPlan", "ShardedPlan", "BaselinePlan",
+    "BASELINE_KINDS", "AUTO_BACKENDS", "DefaultEngine", "plan_for",
+]

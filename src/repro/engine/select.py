@@ -1,0 +1,101 @@
+"""``plan_for``: the paper's regime decision as a one-call auto-selector.
+
+    sharded    a mesh context is active (repro.dist.context) or passed in —
+               multi-device capacity, route through core.distributed;
+    in_memory  the tensor's true device footprint (hi + lo + vals + bases,
+               padded) plus the rank-R factor working set fits the budget —
+               the paper's in-memory regime, zero per-iteration H2D;
+    streamed   otherwise — fixed reservations stream the host-resident
+               tensor (the paper's out-of-memory regime), provided the
+               in-flight reservation + factor working set fits;
+    baselines  never auto-selected; request ``backend="coo"|"fcoo"|"csf"``
+               explicitly for benchmark parity.
+
+``DefaultEngine`` wraps the same decision behind the ``MTTKRPEngine``
+protocol for callers that hold an engine rather than call ``plan_for``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.blco import BLCOTensor
+from repro.core.mttkrp import DEFAULT_COPIES
+from repro.core.streaming import reservation_for
+from repro.dist.context import get_mesh
+
+from .api import factor_bytes, in_memory_bytes
+from .plans import (BASELINE_KINDS, BaselinePlan, InMemoryPlan, ShardedPlan,
+                    StreamedPlan, sharded_bytes)
+
+AUTO_BACKENDS = ("auto", "in_memory", "streamed", "sharded") + BASELINE_KINDS
+
+
+def plan_for(blco: BLCOTensor, device_budget_bytes: int, *, rank: int,
+             dtype=jnp.float32, backend: str = "auto", mesh=None,
+             queues: int = 4, reservation_nnz: int | None = None,
+             tensor=None, resolution: str = "auto",
+             copies: int = DEFAULT_COPIES):
+    """Build the ExecutionPlan for ``blco`` under ``device_budget_bytes``.
+
+    ``tensor`` (the original SparseTensor) is only consulted for baseline
+    backends; without it the coordinates are decoded from the BLCO copy.
+    Raises ValueError when no regime fits the budget.
+    """
+    if backend not in AUTO_BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; "
+                         f"expected one of {AUTO_BACKENDS}")
+    if backend in BASELINE_KINDS:
+        return BaselinePlan.from_tensor(tensor, backend) \
+            if tensor is not None else BaselinePlan.from_blco(blco, backend)
+
+    working = factor_bytes(blco.dims, rank, dtype)
+    mesh = mesh if mesh is not None else get_mesh()
+    if backend == "sharded" or (backend == "auto" and mesh is not None):
+        if mesh is None:
+            raise ValueError("backend='sharded' requires an active mesh "
+                             "(repro.dist.context.set_mesh) or mesh=...")
+        need = sharded_bytes(blco, mesh) + working
+        if need > device_budget_bytes:
+            raise ValueError(
+                f"sharded plan needs {need} B across the mesh "
+                f"(tensor shards x replicas + factors) but the device "
+                f"budget is {device_budget_bytes} B")
+        return ShardedPlan(blco, mesh)
+
+    if backend == "in_memory" or (backend == "auto" and
+                                  in_memory_bytes(blco) + working
+                                  <= device_budget_bytes):
+        if in_memory_bytes(blco) + working > device_budget_bytes:
+            raise ValueError(
+                f"in-memory plan needs {in_memory_bytes(blco) + working} B "
+                f"resident (tensor + factors) but the device budget is "
+                f"{device_budget_bytes} B")
+        return InMemoryPlan(blco, resolution=resolution, copies=copies)
+
+    spec = reservation_for(blco, reservation_nnz)
+    if spec.bytes_in_flight(queues) + working > device_budget_bytes:
+        raise ValueError(
+            f"no regime fits the budget: streaming needs "
+            f"{spec.bytes_in_flight(queues) + working} B in flight "
+            f"(reservation {spec.nnz} nnz x {queues} queues + factors) "
+            f"but the device budget is {device_budget_bytes} B")
+    return StreamedPlan(blco, queues=queues, spec=spec,
+                        resolution=resolution, copies=copies)
+
+
+class DefaultEngine:
+    """MTTKRPEngine over ``plan_for`` with fixed streaming configuration."""
+
+    def __init__(self, *, queues: int = 4, mesh=None, backend: str = "auto",
+                 reservation_nnz: int | None = None):
+        self.queues = queues
+        self.mesh = mesh
+        self.backend = backend
+        self.reservation_nnz = reservation_nnz
+
+    def plan(self, blco: BLCOTensor, *, device_budget_bytes: int, rank: int,
+             dtype=jnp.float32):
+        return plan_for(blco, device_budget_bytes, rank=rank, dtype=dtype,
+                        backend=self.backend, mesh=self.mesh,
+                        queues=self.queues,
+                        reservation_nnz=self.reservation_nnz)

@@ -1,18 +1,21 @@
-"""Multi-tenant decomposition service over pooled device reservations.
+"""Multi-tenant decomposition service over pooled execution plans.
 
-Turns the paper's single-copy BLCO + fixed-reservation streaming into a
-serving layer: many concurrent CP-ALS / MTTKRP jobs share one accelerator
-under a device-memory admission budget.
+Turns the paper's single-copy BLCO + unified engine API into a serving
+layer: many concurrent CP-ALS / MTTKRP jobs share one accelerator under a
+measured device-byte admission budget, each executing through an
+``ExecutionPlan`` — device-resident for small tensors, streamed through
+pooled reservations for large ones.
 
     registry   BLCO construction cache keyed by content fingerprint
-    executor   pooled reservation executor (shared launch-buffer shapes)
-    scheduler  FIFO admission under a byte budget + round-robin iterations
+    executor   ServiceEngine: pooled plans (reservations + device residency)
+    scheduler  FIFO admission by plan.device_bytes() + round-robin iterations
     api        typed requests/responses + the DecompositionService facade
-    metrics    per-job and service-wide counters
+    metrics    per-job and service-wide counters (unified EngineStats)
 """
 from .api import (DecompositionResult, DecompositionService, JobStatus,
                   MTTKRPQuery, SubmitDecomposition, DEFAULT_DEVICE_BUDGET)
-from .executor import PooledExecutor
+from .executor import (PooledExecutor, PooledInMemoryPlan, PooledStreamedPlan,
+                       ServiceEngine)
 from .metrics import JobMetrics, ServiceMetrics
 from .registry import BuildParams, TensorHandle, TensorRegistry, fingerprint
 from .scheduler import Job, JobScheduler, QUEUED, RUNNING, DONE, FAILED
@@ -20,7 +23,8 @@ from .scheduler import Job, JobScheduler, QUEUED, RUNNING, DONE, FAILED
 __all__ = [
     "DecompositionResult", "DecompositionService", "JobStatus",
     "MTTKRPQuery", "SubmitDecomposition", "DEFAULT_DEVICE_BUDGET",
-    "PooledExecutor", "JobMetrics", "ServiceMetrics",
+    "ServiceEngine", "PooledExecutor", "PooledInMemoryPlan",
+    "PooledStreamedPlan", "JobMetrics", "ServiceMetrics",
     "BuildParams", "TensorHandle", "TensorRegistry", "fingerprint",
     "Job", "JobScheduler", "QUEUED", "RUNNING", "DONE", "FAILED",
 ]

@@ -1,9 +1,12 @@
 """Typed request/response surface + the synchronous service facade.
 
-``DecompositionService`` wires registry -> scheduler -> pooled executor into
+``DecompositionService`` wires registry -> scheduler -> service engine into
 one front door: submit decomposition jobs (CP-ALS to convergence), issue
 one-shot MTTKRP queries against registered tensors, drive everything to
-completion, and read per-job / service-wide metrics.
+completion, and read per-job / service-wide metrics.  Every MTTKRP — job
+iteration or one-shot query — executes through an ``ExecutionPlan`` from
+the pooled ``ServiceEngine``: small tensors transparently run
+device-resident, larger ones stream, all under one measured byte budget.
 """
 from __future__ import annotations
 
@@ -14,11 +17,11 @@ from repro.core.cp_als import CPResult
 from repro.core.tensor import SparseTensor
 
 from . import scheduler as sched
-from .executor import PooledExecutor
+from .executor import ServiceEngine
 from .metrics import ServiceMetrics
 from .registry import BuildParams, TensorRegistry
 
-DEFAULT_DEVICE_BUDGET = 256 << 20           # 256 MiB of pooled reservations
+DEFAULT_DEVICE_BUDGET = 256 << 20           # 256 MiB of admitted plan bytes
 
 
 @dataclasses.dataclass
@@ -35,7 +38,7 @@ class SubmitDecomposition:
 
 @dataclasses.dataclass
 class MTTKRPQuery:
-    """Request: one streamed mode-n MTTKRP against a (cached) tensor."""
+    """Request: one mode-n MTTKRP against a (cached) tensor."""
     tensor: SparseTensor
     factors: list
     mode: int
@@ -54,6 +57,7 @@ class JobStatus:
     converged: bool
     queue_wait_s: float
     cache_hit: bool
+    backend: str = ""            # engine regime ("in_memory" | "streamed" | "")
     error: str | None = None
 
 
@@ -67,16 +71,21 @@ class DecompositionResult:
 
 
 class DecompositionService:
-    """Multi-tenant decomposition service over pooled device reservations."""
+    """Multi-tenant decomposition service over pooled execution plans."""
 
     def __init__(self, *, device_budget_bytes: int = DEFAULT_DEVICE_BUDGET,
                  queues: int = 4, max_active: int | None = None):
         self.registry = TensorRegistry()
-        self.executor = PooledExecutor(queues=queues)
+        self.engine = ServiceEngine(queues=queues)
         self.metrics = ServiceMetrics()
         self.scheduler = sched.JobScheduler(
-            self.executor, device_budget_bytes=device_budget_bytes,
+            self.engine, device_budget_bytes=device_budget_bytes,
             max_active=max_active, metrics=self.metrics)
+
+    @property
+    def executor(self) -> ServiceEngine:
+        """Deprecated PR-1 name for the service engine."""
+        return self.engine
 
     # ------------------------------------------------------------- requests
     def submit(self, req: SubmitDecomposition) -> int:
@@ -93,29 +102,34 @@ class DecompositionService:
         return job_id
 
     def mttkrp(self, query: MTTKRPQuery):
-        """One-shot streamed MTTKRP (registers/caches the tensor first)."""
+        """One-shot MTTKRP (registers/caches the tensor first).
+
+        Runs through an engine plan under the same measured admission
+        budget as jobs: the engine picks device-resident or streamed for
+        the query, and the plan is closed (its bytes released) afterwards.
+        """
         if not 0 <= query.mode < query.tensor.order:
             raise ValueError(f"mode {query.mode} out of range for "
                              f"order-{query.tensor.order} tensor")
         handle = self.registry.register(query.tensor, build=query.build,
                                         reservation_nnz=query.reservation_nnz)
         self._sync_cache_counters()
-        # queries obey the same admission budget as jobs: a one-shot MTTKRP
-        # must not push the pooled reservations past the device budget
-        held = self.executor.acquire(handle)
-        if self.metrics.admitted_reservation_bytes + held > \
-                self.scheduler.device_budget_bytes:
-            self.executor.release(handle)
+        rank = query.factors[0].shape[1]
+        remaining = self.scheduler.device_budget_bytes \
+            - self.metrics.admitted_reservation_bytes
+        plan = self.engine.try_plan(handle, rank=rank,
+                                    budget_remaining=remaining)
+        if plan is None:
             raise ValueError(
-                f"query reservation ({held} B) does not fit the device "
-                f"budget ({self.scheduler.device_budget_bytes} B) with "
-                f"{self.metrics.admitted_reservation_bytes} B already admitted")
-        self.metrics.hold_bytes(held)
+                f"query does not fit the device budget: needs "
+                f"{self.engine.min_cost(handle, rank)} B but only "
+                f"{remaining} B of {self.scheduler.device_budget_bytes} B "
+                f"remain unadmitted")
+        self.metrics.hold_bytes(plan.device_bytes())
         try:
-            return self.executor.mttkrp(handle, query.factors, query.mode)
+            return plan.mttkrp(query.factors, query.mode)
         finally:
-            freed = self.executor.release(handle)
-            self.metrics.hold_bytes(-freed)
+            self.metrics.hold_bytes(-plan.close())
 
     # --------------------------------------------------------------- driving
     def step(self) -> bool:
@@ -130,18 +144,28 @@ class DecompositionService:
                 if job.state == sched.DONE}
 
     # ---------------------------------------------------------------- status
+    def _get_job(self, job_id: int) -> sched.Job:
+        job = self.scheduler.jobs.get(job_id)
+        if job is None:
+            known = sorted(self.scheduler.jobs)
+            known_desc = f"known ids: {known[0]}..{known[-1]}" if known \
+                else "no jobs submitted yet"
+            raise ValueError(f"unknown job id {job_id!r}; {known_desc}")
+        return job
+
     def status(self, job_id: int) -> JobStatus:
-        job = self.scheduler.jobs[job_id]
+        job = self._get_job(job_id)
         return JobStatus(
             job_id=job.job_id, state=job.state, tensor_key=job.handle.key,
             iteration=job.cp.iteration if job.cp is not None else 0,
             fit=job.fit,
             converged=bool(job.cp is not None and job.cp.converged),
             queue_wait_s=job.metrics.queue_wait_s,
-            cache_hit=job.metrics.cache_hit, error=job.error)
+            cache_hit=job.metrics.cache_hit,
+            backend=job.metrics.backend, error=job.error)
 
     def result(self, job_id: int) -> DecompositionResult:
-        job = self.scheduler.jobs[job_id]
+        job = self._get_job(job_id)
         if job.state != sched.DONE:
             raise ValueError(f"job {job_id} is {job.state}, not done")
         return DecompositionResult(

@@ -1,20 +1,35 @@
-"""Pooled reservation executor: fixed launch-buffer shapes shared by tenants.
+"""ServiceEngine: pooled ExecutionPlans for registered tensors.
 
-Refactored out of ``core/streaming.py``: the single-tensor ``OOMExecutor``
-owns one reservation; here a *pool* of reservation shapes serves every
-admitted job. Two jobs whose tensors pad to the same ``ReservationSpec``
-stream through identical device buffer shapes, so they hit the same
-compiled ``launch_mttkrp`` executable (jit caches on shapes + static args)
-and the scheduler charges the device budget once per pooled shape, not once
-per job — the multi-tenant generalization of the paper's reused queue
-reservations.
+The multi-tenant restatement of ``repro.engine``'s regime decision.  Two
+pools back the plans it hands out:
+
+* **reservation pool** — jobs whose tensors pad to the same
+  ``ReservationSpec`` stream through identical device buffer shapes, so
+  they hit the same compiled ``launch_mttkrp`` executable and the budget is
+  charged once per pooled shape (the paper's reused queue reservations,
+  shared across tenants);
+* **residency pool** — jobs on the same registered tensor whose BLCO fits
+  the remaining budget share ONE device-resident copy (``DeviceBLCO``),
+  skipping per-iteration H2D entirely — the device-resident fast path
+  under the same admission accounting.
+
+Each admitted job gets its *own* plan object (own ``EngineStats``) over the
+shared pooled state; ``plan.device_bytes()`` reports the bytes that plan
+newly holds against the budget (0 when it joined an existing pool entry),
+and ``plan.close()`` returns the bytes freed (the full entry, when the last
+sharer leaves) — so summing charges and frees over any admission order
+nets to zero.
 """
 from __future__ import annotations
 
 import dataclasses
 
-from repro.core.mttkrp import DEFAULT_COPIES
-from repro.core.streaming import ReservationSpec, StreamStats, stream_mttkrp
+import jax.numpy as jnp
+
+from repro.core.mttkrp import DeviceBLCO
+from repro.core.streaming import ReservationSpec
+from repro.engine.api import factor_bytes, in_memory_bytes
+from repro.engine.plans import InMemoryPlan, StreamedPlan
 
 from .registry import TensorHandle
 
@@ -26,69 +41,168 @@ class PoolEntry:
     launches: int = 0
 
 
-class PooledExecutor:
-    """Streams any registered tensor through a shared reservation pool."""
+@dataclasses.dataclass
+class ResidentEntry:
+    key: str
+    device: DeviceBLCO
+    bytes: int
+    refcount: int = 0
+
+
+class PooledStreamedPlan(StreamedPlan):
+    """A per-job streamed plan over a pooled reservation shape."""
+
+    def __init__(self, engine: "ServiceEngine", handle: TensorHandle,
+                 held_bytes: int):
+        super().__init__(handle.blco, queues=engine.queues, spec=handle.spec,
+                         chunks=handle.chunks)
+        self._engine = engine
+        self._held = held_bytes
+
+    def device_bytes(self) -> int:
+        """Bytes this plan newly holds against the budget (0 when the
+        reservation shape was already pooled by another tenant)."""
+        return 0 if self._closed else self._held
+
+    def close(self) -> int:
+        if self._closed:
+            return 0
+        self._closed = True
+        self._chunks = None                 # handle keeps its own reference
+        return self._engine._release_stream(self.spec)
+
+
+class PooledInMemoryPlan(InMemoryPlan):
+    """A per-job device-resident plan over a pooled DeviceBLCO copy."""
+
+    def __init__(self, engine: "ServiceEngine", handle: TensorHandle,
+                 entry: ResidentEntry, held_bytes: int):
+        super().__init__(handle.blco, device=entry.device, owns_device=False)
+        self._engine = engine
+        self._entry = entry
+        self._held = held_bytes
+        if held_bytes:                      # this plan paid for the upload
+            self._stats.h2d_bytes += held_bytes
+            self._stats.launches += 1
+
+    def device_bytes(self) -> int:
+        return 0 if self._dev is None else self._held
+
+    def close(self) -> int:
+        if self._dev is None:
+            return 0
+        self._dev = None
+        return self._engine._release_resident(self._entry.key)
+
+
+class ServiceEngine:
+    """Plans pooled execution for registered tensors under one device budget."""
 
     def __init__(self, *, queues: int = 4):
         self.queues = queues
-        self._pool: dict[ReservationSpec, PoolEntry] = {}
+        self._stream_pool: dict[ReservationSpec, PoolEntry] = {}
+        self._resident_pool: dict[str, ResidentEntry] = {}
 
-    # ------------------------------------------------------ pool accounting
-    def acquire(self, handle: TensorHandle) -> int:
-        """Take a reference on the handle's reservation shape.
-
-        Returns the device bytes newly held (0 when the shape is already
-        pooled — the paper's fixed reservations are shape-keyed, so a second
-        tenant on an existing shape is free).
-        """
-        entry = self._pool.get(handle.spec)
-        if entry is None:
-            entry = self._pool[handle.spec] = PoolEntry(spec=handle.spec)
-        entry.refcount += 1
-        if entry.refcount == 1:
-            return handle.spec.bytes_in_flight(self.queues)
-        return 0
-
-    def release(self, handle: TensorHandle) -> int:
-        """Drop a reference; returns device bytes freed (0 if still shared)."""
-        entry = self._pool[handle.spec]
-        entry.refcount -= 1
-        if entry.refcount == 0:
-            del self._pool[handle.spec]
-            return handle.spec.bytes_in_flight(self.queues)
-        return 0
-
-    def pooled_bytes(self) -> int:
-        """Device bytes currently reserved across all pooled shapes."""
-        return sum(spec.bytes_in_flight(self.queues) for spec in self._pool)
-
-    def reservation_bytes(self, handle: TensorHandle) -> int:
-        """Bytes admitting this handle would add to the pool."""
-        if handle.spec in self._pool:
+    # --------------------------------------------------------------- costs
+    def streamed_cost(self, handle: TensorHandle) -> int:
+        """Bytes a streamed plan for this handle would newly hold."""
+        if handle.spec in self._stream_pool:
             return 0
         return handle.spec.bytes_in_flight(self.queues)
 
+    def resident_cost(self, handle: TensorHandle) -> int:
+        """Bytes a device-resident plan for this handle would newly hold."""
+        if handle.key in self._resident_pool:
+            return 0
+        return in_memory_bytes(handle.blco)
+
+    def min_cost(self, handle: TensorHandle, rank: int, dtype=jnp.float32) -> int:
+        """Cheapest unpooled device need (the can-never-fit check).
+
+        Every regime keeps the rank-R factor working set resident alongside
+        the tensor state, so it is part of the need either way.
+        """
+        working = factor_bytes(handle.dims, rank, dtype)
+        return working + min(handle.spec.bytes_in_flight(self.queues),
+                             in_memory_bytes(handle.blco))
+
+    # ---------------------------------------------------------------- plans
+    def try_plan(self, handle: TensorHandle, *, rank: int,
+                 dtype=jnp.float32, budget_remaining: int):
+        """The pooled regime decision: an ExecutionPlan, or None to wait.
+
+        Device-resident when another tenant already holds this tensor
+        resident (joining an existing copy is free and strictly better than
+        streaming), or when the tensor's true footprint plus the rank-R
+        factor working set fits what is left of the budget; streamed when
+        at least the (pooled) reservation fits; None when neither does.
+        """
+        working = factor_bytes(handle.dims, rank, dtype)
+        rc = self.resident_cost(handle)
+        if rc == 0 or rc + working <= budget_remaining:
+            return self._plan_resident(handle)
+        sc = self.streamed_cost(handle)
+        if sc + working <= budget_remaining:
+            return self._plan_streamed(handle)
+        return None
+
+    def _plan_resident(self, handle: TensorHandle) -> PooledInMemoryPlan:
+        entry = self._resident_pool.get(handle.key)
+        held = 0
+        if entry is None:
+            device = DeviceBLCO(handle.blco)
+            entry = ResidentEntry(key=handle.key, device=device,
+                                  bytes=device.device_bytes())
+            self._resident_pool[handle.key] = entry
+            held = entry.bytes
+        entry.refcount += 1
+        return PooledInMemoryPlan(self, handle, entry, held)
+
+    def _plan_streamed(self, handle: TensorHandle) -> PooledStreamedPlan:
+        entry = self._stream_pool.get(handle.spec)
+        held = 0
+        if entry is None:
+            entry = self._stream_pool[handle.spec] = PoolEntry(spec=handle.spec)
+            held = handle.spec.bytes_in_flight(self.queues)
+        entry.refcount += 1
+        return PooledStreamedPlan(self, handle, held)
+
+    # ------------------------------------------------------------- releases
+    def _release_stream(self, spec: ReservationSpec) -> int:
+        entry = self._stream_pool[spec]
+        entry.refcount -= 1
+        if entry.refcount == 0:
+            del self._stream_pool[spec]
+            return spec.bytes_in_flight(self.queues)
+        return 0
+
+    def _release_resident(self, key: str) -> int:
+        entry = self._resident_pool[key]
+        entry.refcount -= 1
+        if entry.refcount == 0:
+            del self._resident_pool[key]
+            entry.device.delete()
+            return entry.bytes
+        return 0
+
+    # ------------------------------------------------------------ introspect
+    def pooled_bytes(self) -> int:
+        """Device bytes currently held across both pools."""
+        return sum(spec.bytes_in_flight(self.queues)
+                   for spec in self._stream_pool) \
+            + sum(e.bytes for e in self._resident_pool.values())
+
     @property
     def pool_size(self) -> int:
-        return len(self._pool)
+        """Number of pooled streaming reservation shapes."""
+        return len(self._stream_pool)
 
-    # ------------------------------------------------------------- compute
-    def mttkrp(self, handle: TensorHandle, factors, mode: int, *,
-               resolution: str = "auto", copies: int = DEFAULT_COPIES,
-               stats: StreamStats | None = None):
-        """Streamed mode-n MTTKRP for one registered tensor.
+    @property
+    def resident_count(self) -> int:
+        """Number of pooled device-resident tensor copies."""
+        return len(self._resident_pool)
 
-        ``stats`` is the caller's (per-job) accounting object; pool-wide
-        launch counts are kept on the entry.
-        """
-        entry = self._pool.get(handle.spec)
-        if entry is None or entry.refcount <= 0:
-            raise RuntimeError("handle not admitted to the pool "
-                               "(scheduler admission must acquire() first)")
-        stats = stats if stats is not None else StreamStats()
-        before = stats.launches
-        out = stream_mttkrp(handle.chunks, handle.blco, factors, mode,
-                            queues=self.queues, resolution=resolution,
-                            copies=copies, stats=stats)
-        entry.launches += stats.launches - before
-        return out
+
+# Deprecated name from PR 1; the pooled executor grew into the service's
+# MTTKRPEngine.  Kept so external callers keep importing.
+PooledExecutor = ServiceEngine

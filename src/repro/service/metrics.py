@@ -1,16 +1,16 @@
 """Per-job and service-wide counters.
 
-Every job carries its own ``StreamStats`` (the core streaming layer already
-accounts H2D bytes / launches / phase times per stats object), plus queue
-timestamps; the service aggregates across jobs and tracks the admission
-bytes the scheduler holds against the device budget.
+Every admitted job references its plan's ``EngineStats`` (the unified
+engine counters: H2D bytes, launches, dispatch vs fenced device time), plus
+queue timestamps; the service aggregates across jobs and tracks the
+measured plan bytes the scheduler holds against the device budget.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 
-from repro.core.streaming import StreamStats
+from repro.core.streaming import EngineStats
 
 
 @dataclasses.dataclass
@@ -20,7 +20,8 @@ class JobMetrics:
     completed_s: float | None = None
     iterations: int = 0
     cache_hit: bool = False
-    stream: StreamStats = dataclasses.field(default_factory=StreamStats)
+    backend: str = ""                    # which regime the engine chose
+    stats: EngineStats = dataclasses.field(default_factory=EngineStats)
 
     @property
     def queue_wait_s(self) -> float:
@@ -39,10 +40,12 @@ class JobMetrics:
             "queue_wait_s": self.queue_wait_s,
             "run_time_s": self.run_time_s,
             "cache_hit": self.cache_hit,
-            "h2d_bytes": self.stream.h2d_bytes,
-            "launches": self.stream.launches,
-            "put_time_s": self.stream.put_time_s,
-            "compute_time_s": self.stream.compute_time_s,
+            "backend": self.backend,
+            "h2d_bytes": self.stats.h2d_bytes,
+            "launches": self.stats.launches,
+            "put_time_s": self.stats.put_time_s,
+            "dispatch_time_s": self.stats.dispatch_time_s,
+            "device_time_s": self.stats.device_time_s,
         }
 
 
@@ -58,7 +61,9 @@ class ServiceMetrics:
     iterations_total: int = 0
     h2d_bytes_total: int = 0
     launches_total: int = 0
-    admitted_reservation_bytes: int = 0        # currently held vs the budget
+    # measured plan bytes currently held vs the budget (the name predates
+    # the engine API, when only reservations were charged; kept for compat)
+    admitted_reservation_bytes: int = 0
     peak_admitted_reservation_bytes: int = 0
 
     def hold_bytes(self, delta: int) -> None:

@@ -60,7 +60,14 @@ class TensorHandle:
 
     @property
     def format_bytes(self) -> int:
+        """True device footprint of the format (hi + lo + vals + bases)."""
         return format_bytes(self.blco)
+
+    @property
+    def in_memory_bytes(self) -> int:
+        """Predicted device bytes of a resident (InMemoryPlan) copy."""
+        from repro.engine.api import in_memory_bytes
+        return in_memory_bytes(self.blco)
 
 
 class TensorRegistry:

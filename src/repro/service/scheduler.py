@@ -1,11 +1,15 @@
-"""Job scheduler: admission by the paper's device-memory constraint + fair share.
+"""Job scheduler: admission by measured plan bytes + round-robin fair share.
 
 Admission control is the service restatement of the paper's §4.2 memory
-constraint: the sum of admitted jobs' padded reservation bytes (queue depth
-x reservation launch-buffer bytes, charged once per pooled shape) must stay
-within a configurable device budget. Jobs that do not fit wait in a FIFO
-queue; completions release their reservation references and re-run
-admission.
+constraint, now in terms of the unified engine API: each admitted job holds
+an ``ExecutionPlan`` and is charged exactly ``plan.device_bytes()`` — the
+bytes the plan *measurably* holds resident (a shared pool entry is charged
+once, by whichever tenant created it) — instead of a padded worst-case
+reservation sum.  The engine picks the regime per job under the remaining
+budget: small tensors get the device-resident fast path, larger ones
+stream through pooled reservations, and jobs that fit neither wait in a
+FIFO queue.  Completions close their plans (releasing pool references) and
+re-run admission.
 
 Fair share is round-robin at CP-ALS *iteration* granularity: each
 scheduling cycle gives every active job exactly one full ALS sweep
@@ -21,7 +25,7 @@ from typing import Callable
 
 from repro.core.cp_als import CPState, cp_als_init, cp_als_step
 
-from .executor import PooledExecutor
+from .executor import ServiceEngine
 from .metrics import JobMetrics, ServiceMetrics
 from .registry import TensorHandle
 
@@ -43,7 +47,8 @@ class Job:
     cp: CPState | None = None
     metrics: JobMetrics = dataclasses.field(default_factory=JobMetrics)
     error: str | None = None
-    mttkrp_fn: Callable | None = None
+    plan: object | None = None            # ExecutionPlan once admitted
+    mttkrp_fn: Callable | None = None     # test/override hook; default = plan
 
     @property
     def fit(self) -> float | None:
@@ -53,13 +58,13 @@ class Job:
 
 
 class JobScheduler:
-    """FIFO admission under a reservation-byte budget; round-robin stepping."""
+    """FIFO admission by measured plan bytes; round-robin stepping."""
 
-    def __init__(self, executor: PooledExecutor, *,
+    def __init__(self, engine: ServiceEngine, *,
                  device_budget_bytes: int,
                  max_active: int | None = None,
                  metrics: ServiceMetrics | None = None):
-        self.executor = executor
+        self.engine = engine
         self.device_budget_bytes = int(device_budget_bytes)
         self.max_active = max_active
         self.metrics = metrics if metrics is not None else ServiceMetrics()
@@ -72,10 +77,11 @@ class JobScheduler:
     # ------------------------------------------------------------ lifecycle
     def submit(self, handle: TensorHandle, *, rank: int, iters: int = 25,
                tol: float = 1e-5, seed: int = 0) -> int:
-        need = handle.spec.bytes_in_flight(self.executor.queues)
+        need = self.engine.min_cost(handle, rank)
         if need > self.device_budget_bytes:
             raise ValueError(
-                f"job reservation ({need} B) exceeds the device budget "
+                f"job needs at least {need} B of device memory in its "
+                f"cheapest regime, which exceeds the device budget "
                 f"({self.device_budget_bytes} B): it can never be admitted")
         job = Job(job_id=self._next_id, handle=handle, rank=rank,
                   iters=iters, tol=tol, seed=seed)
@@ -87,50 +93,44 @@ class JobScheduler:
         return job.job_id
 
     def _admit(self) -> None:
-        """Admit queued jobs FIFO while the reservation budget allows."""
-        admitted_any = True
-        while admitted_any and self.pending:
-            admitted_any = False
+        """Admit queued jobs FIFO while the measured byte budget allows."""
+        while self.pending:
             if self.max_active is not None and \
                     len(self.active) >= self.max_active:
                 return
             job = self.jobs[self.pending[0]]
-            extra = self.executor.reservation_bytes(job.handle)
-            if self.metrics.admitted_reservation_bytes + extra > \
-                    self.device_budget_bytes:
+            remaining = self.device_budget_bytes \
+                - self.metrics.admitted_reservation_bytes
+            plan = self.engine.try_plan(job.handle, rank=job.rank,
+                                        budget_remaining=remaining)
+            if plan is None:
                 return                       # head-of-line waits; keep FIFO
             self.pending.pop(0)
-            held = self.executor.acquire(job.handle)
-            self.metrics.hold_bytes(held)
+            self.metrics.hold_bytes(plan.device_bytes())
+            job.plan = plan
             job.state = RUNNING
             job.metrics.admitted_s = time.perf_counter()
+            job.metrics.backend = plan.backend
+            job.metrics.stats = plan.stats()
             job.cp = cp_als_init(job.handle.dims, job.rank,
                                  norm_x=job.handle.norm_x, tol=job.tol,
                                  seed=job.seed)
-            job.mttkrp_fn = self._make_mttkrp_fn(job)
             self.active.append(job.job_id)
             self.metrics.jobs_admitted += 1
-            admitted_any = True
-
-    def _make_mttkrp_fn(self, job: Job) -> Callable:
-        def fn(factors, mode):
-            return self.executor.mttkrp(job.handle, factors, mode,
-                                        stats=job.metrics.stream)
-        return fn
 
     def _retire(self, job: Job, state: str, error: str | None = None) -> None:
         job.state = state
         job.error = error
         job.metrics.completed_s = time.perf_counter()
         self.active.remove(job.job_id)
-        freed = self.executor.release(job.handle)
+        freed = job.plan.close() if job.plan is not None else 0
         self.metrics.hold_bytes(-freed)
         if state == FAILED:
             self.metrics.jobs_failed += 1
         else:
             self.metrics.jobs_completed += 1
-        self.metrics.h2d_bytes_total += job.metrics.stream.h2d_bytes
-        self.metrics.launches_total += job.metrics.stream.launches
+        self.metrics.h2d_bytes_total += job.metrics.stats.h2d_bytes
+        self.metrics.launches_total += job.metrics.stats.launches
         self._admit()
 
     # ------------------------------------------------------------- stepping
@@ -141,8 +141,9 @@ class JobScheduler:
         """
         for job_id in list(self.active):
             job = self.jobs[job_id]
+            backend = job.mttkrp_fn if job.mttkrp_fn is not None else job.plan
             try:
-                cp_als_step(job.mttkrp_fn, job.cp)
+                cp_als_step(backend, job.cp)
             except Exception as exc:          # noqa: BLE001 — job isolation:
                 self._retire(job, FAILED, error=repr(exc))
                 continue                      # one bad tensor must not take

@@ -2,18 +2,20 @@
 
 The acceptance scenario: >=3 concurrent jobs on >=2 distinct tensors run
 through the scheduler with (a) a BLCO cache hit on the repeated tensor,
-(b) admitted reservation bytes never exceeding the budget, (c) per-job CP
-factors matching a sequential cp_als run on the same seeds.
+(b) admitted plan bytes never exceeding the budget, (c) per-job CP factors
+matching a solo engine run on the same seeds.  Admission is by *measured*
+``plan.device_bytes()``: small tensors get the device-resident fast path,
+larger ones stream through pooled reservations, under one shared budget.
 """
 import numpy as np
 import pytest
 
 from repro import core
+from repro.engine import factor_bytes, in_memory_bytes, plan_for
 from repro.service import (BuildParams, DecompositionService, MTTKRPQuery,
                            SubmitDecomposition, TensorRegistry)
 
 BUILD = BuildParams(max_nnz_per_block=256)      # force many launches
-
 
 def _t1(seed=6):
     return core.random_tensor((30, 22, 14), 1500, seed=seed, dist="powerlaw")
@@ -43,15 +45,18 @@ def test_acceptance_three_jobs_two_tensors():
     # (a) BLCO cache hit on the repeated tensor
     assert m["blco_cache_hits"] == 1 and m["blco_cache_misses"] == 2
     assert svc.status(j3).cache_hit and not svc.status(j1).cache_hit
-    # (b) admitted reservation bytes never exceeded the budget
+    # (b) admitted plan bytes never exceeded the budget; a 64 MiB budget
+    # gives every tenant the device-resident fast path
     assert 0 < m["peak_admitted_reservation_bytes"] <= 64 << 20
     assert m["admitted_reservation_bytes"] == 0   # all released at the end
-    # (c) per-job factors match a sequential cp_als on the same seeds
+    assert all(svc.status(j).backend == "in_memory" for j in (j1, j2, j3))
+    # (c) per-job factors match a solo engine run on the same seeds
     for jid, t, rank, seed in ((j1, t1, 6, 7), (j2, t2, 8, 1)):
         b = core.build_blco(t, max_nnz_per_block=256)
-        ex = core.OOMExecutor(b, queues=3)
-        ref = core.cp_als(lambda f, m_: ex.mttkrp(f, m_), t.dims, rank,
-                          norm_x=_norm(t), iters=5, seed=seed)
+        plan = plan_for(b, 64 << 20, rank=rank, backend="in_memory")
+        ref = core.cp_als(plan, t.dims, rank, norm_x=_norm(t), iters=5,
+                          seed=seed)
+        plan.close()
         got = results[jid].result
         np.testing.assert_allclose(got.fits, ref.fits, rtol=1e-5, atol=1e-6)
         for a, b_ in zip(got.factors, ref.factors):
@@ -75,17 +80,65 @@ def test_round_robin_iteration_fair_share():
         assert trace[cycle * 3:(cycle + 1) * 3] == ids
 
 
+def test_fast_path_and_streaming_share_one_budget():
+    """The ISSUE acceptance: under ONE budget the engine runs the small
+    tensor device-resident and streams the large one, and admission charges
+    exactly the measured plan bytes."""
+    t_small, t_big = _t1(), _t2()
+    probe = TensorRegistry()
+    h_small = probe.register(t_small, build=BUILD)
+    h_big = probe.register(t_big, build=BUILD)
+    # budget: small's residency + big's reservation + both factor sets
+    budget = h_small.in_memory_bytes \
+        + factor_bytes(t_small.dims, 4, np.float32) \
+        + h_big.spec.bytes_in_flight(2) \
+        + factor_bytes(t_big.dims, 4, np.float32)
+    assert budget - h_small.in_memory_bytes < h_big.in_memory_bytes
+
+    svc = DecompositionService(device_budget_bytes=budget, queues=2)
+    js = svc.submit(SubmitDecomposition(tensor=t_small, rank=4, iters=3,
+                                        seed=0, build=BUILD))
+    jb = svc.submit(SubmitDecomposition(tensor=t_big, rank=4, iters=3,
+                                        seed=0, build=BUILD))
+    assert svc.status(js).backend == "in_memory"      # fast path
+    assert svc.status(jb).backend == "streamed"       # too big -> streams
+    # measured admission: exactly the resident copy + the pooled reservation
+    m = svc.service_metrics()
+    assert m["admitted_reservation_bytes"] == \
+        h_small.in_memory_bytes + h_big.spec.bytes_in_flight(2)
+    svc.run()
+    m = svc.service_metrics()
+    assert svc.status(js).state == "done" and svc.status(jb).state == "done"
+    assert m["peak_admitted_reservation_bytes"] <= budget
+    assert m["admitted_reservation_bytes"] == 0
+    # the resident job paid one upload; the streamed job paid per-iteration
+    rs, rb = svc.result(js).metrics, svc.result(jb).metrics
+    assert rs["backend"] == "in_memory" and rs["launches"] == 1
+    assert rb["backend"] == "streamed" and rb["launches"] > 3
+    # both still match a solo engine run on the same seeds
+    b = core.build_blco(t_big, max_nnz_per_block=256)
+    solo = plan_for(b, h_big.spec.bytes_in_flight(2)
+                    + factor_bytes(t_big.dims, 4, np.float32),
+                    rank=4, queues=2)
+    assert solo.backend == "streamed"
+    ref = core.cp_als(solo, t_big.dims, 4, norm_x=_norm(t_big), iters=3,
+                      seed=0)
+    solo.close()
+    np.testing.assert_allclose(svc.result(jb).result.fits, ref.fits,
+                               rtol=1e-5, atol=1e-6)
+
+
 def test_admission_control_respects_budget():
-    # two distinct reservation shapes (256- vs 512-slot); the budget fits
-    # either alone but not both -> the second must queue until the first
-    # job completes and releases its reservation
+    # the budget fits the small tensor's regime but not the big one's ->
+    # the second job must queue until the first completes and releases
     t1, t2 = _t1(), _t2()
     probe = TensorRegistry()
     small = probe.register(t1, build=BUILD).spec.bytes_in_flight(2)
     big = probe.register(
         t2, build=BuildParams(max_nnz_per_block=512)).spec.bytes_in_flight(2)
     assert small < big
-    svc = DecompositionService(device_budget_bytes=big, queues=2)
+    budget = big + factor_bytes(t2.dims, 4, np.float32)
+    svc = DecompositionService(device_budget_bytes=budget, queues=2)
     j1 = svc.submit(SubmitDecomposition(tensor=t1, rank=4, iters=3, seed=0,
                                         build=BUILD))
     j2 = svc.submit(SubmitDecomposition(
@@ -97,26 +150,73 @@ def test_admission_control_respects_budget():
     svc.run()
     m = svc.service_metrics()
     assert svc.status(j1).state == "done" and svc.status(j2).state == "done"
-    assert m["peak_admitted_reservation_bytes"] <= big
+    assert m["peak_admitted_reservation_bytes"] <= budget
 
 
-def test_same_shape_tenants_share_one_reservation():
-    """Jobs padding to one ReservationSpec charge the budget once (pooling)."""
+def test_tenants_share_pooled_state():
+    """Plans over one pool entry charge the budget once, whichever pool.
+
+    Same-content tensors under a big budget share ONE device-resident copy;
+    under a tight budget, same-shape tensors share ONE reservation."""
+    # residency pooling: 3 tenants, one DeviceBLCO copy, charged once
     svc = DecompositionService(device_budget_bytes=64 << 20, queues=2)
     for s in range(3):                            # same tensor content 3x
         svc.submit(SubmitDecomposition(tensor=_t1(), rank=4, iters=2, seed=s,
                                        build=BUILD))
-    assert svc.executor.pool_size == 1            # one pooled shape
-    one = svc.scheduler.jobs[0].handle.spec.bytes_in_flight(2)
+    assert svc.engine.resident_count == 1         # one pooled resident copy
+    assert svc.engine.pool_size == 0              # nothing streams
+    one = svc.scheduler.jobs[0].handle.in_memory_bytes
     assert svc.service_metrics()["admitted_reservation_bytes"] == one
     svc.run()
     assert svc.service_metrics()["peak_admitted_reservation_bytes"] == one
+    assert svc.engine.resident_count == 0         # released at the end
+
+    # reservation pooling: budget below residency -> all three stream
+    # through one pooled shape, charged once
+    probe = TensorRegistry()
+    h = probe.register(_t1(), build=BUILD)
+    res_bytes = h.spec.bytes_in_flight(2)
+    budget = res_bytes + factor_bytes(h.dims, 4, np.float32) + 1024
+    assert budget < h.in_memory_bytes + factor_bytes(h.dims, 4, np.float32)
+    svc = DecompositionService(device_budget_bytes=budget, queues=2)
+    for s in range(3):
+        svc.submit(SubmitDecomposition(tensor=_t1(), rank=4, iters=2, seed=s,
+                                       build=BUILD))
+    assert svc.engine.pool_size == 1              # one pooled shape
+    assert svc.engine.resident_count == 0
+    assert svc.service_metrics()["admitted_reservation_bytes"] == res_bytes
+    svc.run()
+    assert svc.service_metrics()["peak_admitted_reservation_bytes"] == res_bytes
 
 
 def test_oversized_job_rejected_at_submit():
     svc = DecompositionService(device_budget_bytes=1024, queues=4)
     with pytest.raises(ValueError, match="can never be admitted"):
         svc.submit(SubmitDecomposition(tensor=_t1(), rank=4, build=BUILD))
+    # regression: a tiny reservation does NOT sneak a huge factor working
+    # set past admission — rank-R factor bytes count in every regime
+    t = _t1()
+    probe = TensorRegistry()
+    h = probe.register(t, build=BUILD)
+    budget = h.spec.bytes_in_flight(4) + h.in_memory_bytes
+    assert factor_bytes(t.dims, 4096, np.float32) > budget
+    svc = DecompositionService(device_budget_bytes=budget, queues=4)
+    with pytest.raises(ValueError, match="can never be admitted"):
+        svc.submit(SubmitDecomposition(tensor=t, rank=4096, build=BUILD))
+
+
+def test_unknown_job_id_raises_value_error():
+    svc = DecompositionService(device_budget_bytes=64 << 20, queues=2)
+    with pytest.raises(ValueError, match="no jobs submitted yet"):
+        svc.status(0)
+    j = svc.submit(SubmitDecomposition(tensor=_t1(), rank=4, iters=1,
+                                       build=BUILD))
+    svc.run()
+    assert svc.status(j).state == "done"
+    with pytest.raises(ValueError, match=r"unknown job id 7; known ids: 0..0"):
+        svc.status(7)
+    with pytest.raises(ValueError, match="unknown job id"):
+        svc.result(j + 1)
 
 
 def test_registry_fingerprint_semantics():
@@ -147,9 +247,12 @@ def test_mttkrp_query_matches_in_memory():
                                    rtol=1e-5, atol=1e-5)
     # all three queries + any later job reuse one cached BLCO build
     assert svc.registry.misses == 1 and svc.registry.hits == 2
+    # query plans are closed: nothing left admitted or pooled
+    assert svc.service_metrics()["admitted_reservation_bytes"] == 0
+    assert svc.engine.resident_count == 0 and svc.engine.pool_size == 0
 
 
-def test_failed_job_isolated_and_reservation_released():
+def test_failed_job_isolated_and_plan_released():
     svc = DecompositionService(device_budget_bytes=64 << 20, queues=2)
     good = svc.submit(SubmitDecomposition(tensor=_t1(), rank=4, iters=3,
                                           seed=0, build=BUILD))
@@ -162,8 +265,9 @@ def test_failed_job_isolated_and_reservation_released():
     assert "boom" in svc.status(bad).error
     assert svc.status(good).state == "done"       # unaffected tenant
     m = svc.service_metrics()
-    assert m["admitted_reservation_bytes"] == 0
+    assert m["admitted_reservation_bytes"] == 0   # plans closed on retire
     assert m["jobs_failed"] == 1 and m["jobs_completed"] == 1
+    assert svc.engine.resident_count == 0 and svc.engine.pool_size == 0
 
 
 def test_mttkrp_query_obeys_budget():
@@ -173,7 +277,8 @@ def test_mttkrp_query_obeys_budget():
     svc = DecompositionService(device_budget_bytes=1024, queues=4)
     with pytest.raises(ValueError, match="does not fit the device budget"):
         svc.mttkrp(MTTKRPQuery(tensor=t, factors=factors, mode=0, build=BUILD))
-    assert svc.executor.pool_size == 0            # nothing leaked
+    assert svc.engine.pool_size == 0              # nothing leaked
+    assert svc.engine.resident_count == 0
     assert svc.service_metrics()["admitted_reservation_bytes"] == 0
     with pytest.raises(ValueError, match="out of range"):
         DecompositionService().mttkrp(

@@ -66,3 +66,41 @@ def test_reservation_spec_bytes():
     spec = ReservationSpec(nnz=256, order=4, value_itemsize=4)
     assert spec.bytes_per_launch == 256 * (4 + 4 + 4 + 16)
     assert spec.bytes_in_flight(4) == 4 * spec.bytes_per_launch
+
+
+def test_format_bytes_agrees_with_reservation_accounting():
+    """Regression: ``format_bytes`` and ``ReservationSpec.bytes_per_launch``
+    must agree on the true per-element device footprint (hi + lo + vals +
+    bases).  Historically format_bytes omitted the bases arrays, so the
+    in-memory and streaming regimes disagreed about the same tensor."""
+    t = core.random_tensor((20, 16, 12, 9), 900, seed=2)
+    b = core.build_blco(t)
+    per_elem = 4 + 4 + b.values.dtype.itemsize + 4 * b.order
+    assert core.format_bytes(b) == b.nnz * per_elem
+    # a reservation sized exactly to the tensor holds exactly format_bytes
+    spec = ReservationSpec(nnz=b.nnz, order=b.order,
+                           value_itemsize=b.values.dtype.itemsize)
+    assert spec.bytes_per_launch == core.format_bytes(b)
+    # and the device-resident copy reports the same accounting (padded)
+    from repro.core.mttkrp import DeviceBLCO
+    dev = DeviceBLCO(b)
+    padded = -(-b.nnz // 256) * 256
+    assert dev.device_bytes() == padded * per_elem
+    dev.delete()
+
+
+def test_engine_stats_fields_and_alias():
+    """StreamStats is the unified EngineStats; compute_time_s reads the
+    fenced device span, not the async dispatch span."""
+    assert core.StreamStats is core.EngineStats
+    t = core.random_tensor((25, 18, 21), 1200, seed=4)
+    b = core.build_blco(t, max_nnz_per_block=128)
+    ex = core.OOMExecutor(b, queues=3)
+    ex.mttkrp(_factors(t.dims, 4), 0)
+    s = ex.stats
+    assert s.backend == "streamed" and s.mttkrp_calls == 1
+    assert s.device_time_s >= s.dispatch_time_s > 0
+    assert s.compute_time_s == s.device_time_s
+    assert set(s.snapshot()) >= {"h2d_bytes", "launches", "put_time_s",
+                                 "dispatch_time_s", "device_time_s",
+                                 "total_time_s"}

@@ -16,6 +16,8 @@ mode-balance, OOM parity) are what these measure — see EXPERIMENTS.md.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import statistics
 import time
 
@@ -27,8 +29,15 @@ RANK = 32
 SUITE = ["uber-like", "chicago-like", "vast-like", "darpa-like",
          "nell2-like"]
 
+# block budget for the dispatch bench: forces multi-launch builds (tens to
+# ~150 launches) on the fig8 suite — the hypersparse many-block regime the
+# paper's launch batching targets, where per-launch dispatch + host padding
+# overhead dominates the per-launch loop
+DISPATCH_BLOCK = 1 << 9
+
 
 def _time(fn, *, warmup=2, iters=5) -> float:
+    r = None
     for _ in range(warmup):
         r = fn()
     if hasattr(r, "block_until_ready"):
@@ -268,15 +277,133 @@ def bench_service(rows):
                  f"peak_res={m['peak_admitted_reservation_bytes']/1e6:.2f}MB)"))
 
 
-def main() -> None:
+def bench_dispatch(rows, *, fast: bool = False,
+                   json_path: str | None = "BENCH_3.json") -> dict:
+    """Single-dispatch launch-cache paths vs the PR-2 per-launch loop.
+
+    Per fig8-suite tensor (built with a small block budget so the BLCO has
+    MANY launches — the regime the paper's "reduce kernel launching
+    overhead" claim is about), measures us_per_call of:
+
+      per_launch_loop   PR-2 hot path: one numpy padding pass + one XLA
+                        dispatch per launch per call (``mttkrp_per_launch``)
+      cached_scan_xla   launch cache + single jitted lax.scan dispatch
+                        (``InMemoryPlan(kernel="xla")``)
+      fused_pallas      launch cache + ONE fused pallas_call pipeline
+                        (``InMemoryPlan(kernel="pallas")``; interpret mode
+                        on CPU — the Pallas timings here measure the
+                        interpreter, not TPU performance)
+      phases_pallas     PR-2 three-dispatch Pallas pipeline (cache-driven)
+
+    Emits the machine-readable ``BENCH_3.json`` next to the CSV rows.
+    """
+    from repro.engine import plan_for
+    from repro.kernels import pallas_mttkrp_phases
+
+    suite = SUITE[:2] if fast else SUITE
+    iters = 2 if fast else 5
+    warmup = 1 if fast else 2
+    p_iters = 1 if fast else 3
+    suites: dict[str, dict] = {}
+    speedups = []
+    for name in suite:
+        t = core.paper_like(name, seed=0)
+        b = core.build_blco(t, max_nnz_per_block=DISPATCH_BLOCK)
+        factors = _factors(t)
+        mode = 0
+
+        c0 = core.dispatch_count()
+        core.mttkrp_per_launch(b, factors, mode)
+        loop_dispatches = core.dispatch_count() - c0
+        t_loop = _time(lambda: core.mttkrp_per_launch(b, factors, mode),
+                       warmup=warmup, iters=iters)
+
+        plan_x = plan_for(b, 1 << 40, rank=RANK, backend="in_memory",
+                          kernel="xla")
+        c0 = core.dispatch_count()
+        plan_x.mttkrp(factors, mode)
+        scan_dispatches = core.dispatch_count() - c0
+        t_scan = _time(lambda: plan_x.mttkrp(factors, mode),
+                       warmup=warmup, iters=iters)
+
+        plan_p = plan_for(b, 1 << 40, rank=RANK, backend="in_memory",
+                          kernel="pallas")
+        t_fused = _time(lambda: plan_p.mttkrp(factors, mode),
+                        warmup=1, iters=p_iters)
+        t_phases = _time(lambda: pallas_mttkrp_phases(b, factors, mode),
+                         warmup=1, iters=p_iters)
+
+        sp = t_loop / t_scan
+        speedups.append(sp)
+        suites[name] = {
+            "nnz": t.nnz,
+            "launches": len(b.launches),
+            "per_launch_loop_us": t_loop * 1e6,
+            "cached_scan_xla_us": t_scan * 1e6,
+            "fused_pallas_us": t_fused * 1e6,
+            "phases_pallas_us": t_phases * 1e6,
+            "dispatches_per_call_loop": loop_dispatches,
+            "dispatches_per_call_cached": scan_dispatches,
+            "speedup_cached_scan_vs_loop": sp,
+        }
+        rows.append((f"bench3.{name}.per_launch_loop", t_loop * 1e6,
+                     f"{loop_dispatches} dispatches/call"))
+        rows.append((f"bench3.{name}.cached_scan_xla", t_scan * 1e6,
+                     f"{scan_dispatches} dispatch/call {sp:.2f}x vs loop"))
+        rows.append((f"bench3.{name}.fused_pallas", t_fused * 1e6,
+                     "1 dispatch/call (interpret)"))
+        rows.append((f"bench3.{name}.phases_pallas", t_phases * 1e6,
+                     "3-phase (interpret)"))
+        plan_x.close()
+        plan_p.close()
+
+    geo = float(np.exp(np.mean(np.log(speedups))))
+    rows.append(("bench3.geomean_cached_scan_vs_loop", 0.0, f"{geo:.3f}x"))
+    payload = {
+        "bench": "fused_single_dispatch_blco_mttkrp",
+        "fast_mode": fast,
+        "rank": RANK,
+        "block_budget_nnz": DISPATCH_BLOCK,
+        "backend": _jax_backend(),
+        "note": ("Pallas paths run in interpret mode on CPU; their times "
+                 "measure the interpreter.  The headline comparison is "
+                 "cached_scan_xla (one dispatch, zero per-call host work) "
+                 "vs per_launch_loop (the PR-2 engine hot path)."),
+        "suites": suites,
+        "geomean_speedup_cached_scan_vs_per_launch_loop": geo,
+    }
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+    return payload
+
+
+def _jax_backend() -> str:
+    import jax
+    return jax.default_backend()
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fast", action="store_true",
+                    help="CI smoke mode: dispatch bench only, reduced "
+                         "suite/iterations")
+    ap.add_argument("--json", default="BENCH_3.json", metavar="PATH",
+                    help="where to write the machine-readable dispatch "
+                         "bench (default: BENCH_3.json; '' disables)")
+    args = ap.parse_args(argv)
+
     rows: list[tuple[str, float, str]] = []
     print("# BLCO paper benchmarks (CPU-scale analogues; see EXPERIMENTS.md)")
-    bench_fig8_fig9_fig1(rows)
-    bench_table3(rows)
-    bench_fig10(rows)
-    bench_fig11_fig12(rows)
-    bench_embed_grad(rows)
-    bench_service(rows)
+    if not args.fast:
+        bench_fig8_fig9_fig1(rows)
+        bench_table3(rows)
+        bench_fig10(rows)
+        bench_fig11_fig12(rows)
+        bench_embed_grad(rows)
+        bench_service(rows)
+    bench_dispatch(rows, fast=args.fast, json_path=args.json or None)
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")

@@ -22,10 +22,17 @@ print(f"BLCO: {len(b.blocks)} block(s), {len(b.launches)} launch(es), "
       f"{core.format_bytes(b)/1e6:.1f} MB device-resident")
 print(f"construction: { {k: f'{v*1e3:.1f}ms' for k, v in b.construction_stats.items()} }")
 
-# plan execution under a 1 GiB device budget -> in-memory regime here
-plan = plan_for(b, 1 << 30, rank=16)
-print(f"engine chose backend={plan.backend!r} "
+# plan execution under a 1 GiB device budget -> in-memory regime here.
+# kernel="xla" (default) scans the device-resident launch cache in ONE
+# jitted dispatch per call; kernel="pallas" runs the fused single-kernel
+# pipeline instead (same plan API, interpret mode on CPU).
+plan = plan_for(b, 1 << 30, rank=16, kernel="xla")
+print(f"engine chose backend={plan.backend!r} kernel={plan.kernel!r} "
       f"({plan.device_bytes()/1e6:.1f} MB resident)")
+c0 = core.dispatch_count()
+plan.mttkrp(core.init_factors(t.dims, 16, seed=1), 0)
+print(f"one MTTKRP call = {core.dispatch_count() - c0} device dispatch "
+      f"across {len(b.launches)} launch(es)")
 
 # rank-16 CP decomposition via CP-ALS (Algorithm 1 of the paper)
 res = core.cp_als(plan, t.dims, rank=16,

@@ -2,8 +2,11 @@
 + OOM streaming + CP-ALS) and its baselines."""
 from .tensor import SparseTensor, random_tensor, from_coo, load_tns, paper_like
 from .blco import BLCOTensor, build_blco, decode_coords, format_bytes
-from .mttkrp import (mttkrp, choose_resolution, mttkrp_dense_oracle,
-                     khatri_rao, DeviceBLCO)
+from .mttkrp import (mttkrp, mttkrp_per_launch, choose_resolution,
+                     clear_launch_cache, launch_cache_for,
+                     mttkrp_dense_oracle, khatri_rao, DeviceBLCO)
+from .launches import LaunchCache, launch_cache_bytes, stacked_mttkrp
+from .counters import dispatch_count
 from .baselines import (COOFormat, coo_mttkrp, FCOOFormat, fcoo_mttkrp,
                         CSFFormat, csf_mttkrp)
 from .cp_als import (cp_als, cp_als_init, cp_als_step, as_mttkrp_fn, CPResult,
@@ -14,8 +17,10 @@ from .embed_grad import embedding_lookup
 __all__ = [
     "SparseTensor", "random_tensor", "from_coo", "load_tns", "paper_like",
     "BLCOTensor", "build_blco", "decode_coords", "format_bytes",
-    "mttkrp", "choose_resolution", "mttkrp_dense_oracle", "khatri_rao",
-    "DeviceBLCO",
+    "mttkrp", "mttkrp_per_launch", "choose_resolution",
+    "clear_launch_cache", "launch_cache_for",
+    "mttkrp_dense_oracle", "khatri_rao", "DeviceBLCO",
+    "LaunchCache", "launch_cache_bytes", "stacked_mttkrp", "dispatch_count",
     "COOFormat", "coo_mttkrp", "FCOOFormat", "fcoo_mttkrp",
     "CSFFormat", "csf_mttkrp",
     "cp_als", "cp_als_init", "cp_als_step", "as_mttkrp_fn", "CPResult",

@@ -1,0 +1,29 @@
+"""Process-wide dispatch accounting for MTTKRP execution paths.
+
+A *dispatch* is one host->device invocation of a jitted compute callable
+(the unit the paper's "kernel launching overhead" is paid in).  Every
+MTTKRP path in this repo records its dispatches here, so tests and
+benchmarks can assert launch-count claims directly:
+
+* the legacy per-launch loop records one dispatch per BLCO launch;
+* the launch-cache scan path records exactly ONE per ``mttkrp`` call;
+* the fused Pallas path records exactly ONE per ``mttkrp`` call.
+
+The counter is monotonic; callers snapshot it before/after
+(``dispatch_count()``) rather than resetting, so concurrent readers never
+race each other's deltas.
+"""
+from __future__ import annotations
+
+_dispatches = 0
+
+
+def record_dispatch(n: int = 1) -> None:
+    """Record ``n`` host->device compute dispatches."""
+    global _dispatches
+    _dispatches += int(n)
+
+
+def dispatch_count() -> int:
+    """Monotonic count of compute dispatches recorded so far."""
+    return _dispatches

@@ -1,0 +1,196 @@
+"""Device-resident launch cache: padded launches prepared once, stacked.
+
+The paper's BLCO pitch is that blocking "reduces kernel launching overhead";
+PR 2's engine still paid one XLA dispatch and one host numpy padding pass
+per launch per ``mttkrp`` call.  This module is the fix:
+
+* :class:`LaunchCache` pads every launch to ONE reservation shape (reusing
+  ``prepare_chunks``/``ReservationSpec`` from the streaming layer, so both
+  regimes share the padding code and the byte accounting), stacks the
+  chunks into ``(L, reservation)`` device arrays, and uploads them once;
+* :func:`stacked_mttkrp` replaces the per-launch Python loop + ``out = out
+  + ...`` chain with a single jitted ``lax.scan`` over the stacked
+  launches — ONE dispatch per MTTKRP call regardless of launch count, and
+  per-step intermediates (coordinates, gathered factor rows) bounded by the
+  reservation size instead of the full nnz count.
+
+The stacked arrays are also the zero-copy source for the fused Pallas
+pipeline (``repro.kernels.fused``): ``flat()`` reshapes ``(L, reservation)``
+to one contiguous ``(L * reservation,)`` stream on device, which the fused
+kernel tiles directly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .blco import BLCOTensor
+from .counters import record_dispatch
+from .mttkrp import (DEFAULT_COPIES, choose_resolution, launch_mttkrp_impl)
+from .padding import LANE, pad_multiple
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("re_fields", "re_shifts", "mode", "out_rows",
+                     "resolution", "copies"))
+def stacked_mttkrp(hi, lo, vals, bases, factors, *,
+                   re_fields: tuple, re_shifts: tuple, mode: int,
+                   out_rows: int, resolution: str, copies: int):
+    """Single-dispatch MTTKRP over stacked launches.
+
+    hi/lo: (L, R) uint32; vals: (L, R); bases: (L, R, N) int32; factors:
+    tuple of (I_n, R) arrays.  ``lax.scan`` runs the per-launch dataflow
+    sequentially on device, accumulating into one (out_rows, rank) output —
+    the launch order (and therefore the floating-point accumulation order)
+    matches the legacy per-launch loop exactly.
+    """
+    factors = tuple(factors)
+    rank = factors[0].shape[1]
+    out0 = jnp.zeros((out_rows, rank), factors[0].dtype)
+
+    def body(out, xs):
+        h, l, v, b = xs
+        return out + launch_mttkrp_impl(
+            h, l, v, b, factors, re_fields=re_fields, re_shifts=re_shifts,
+            mode=mode, out_rows=out_rows, resolution=resolution,
+            copies=copies), None
+
+    out, _ = jax.lax.scan(body, out0, (hi, lo, vals, bases))
+    return out
+
+
+class LaunchCache:
+    """Stacked, device-resident, reservation-padded launches of one tensor.
+
+    Built once per plan; every ``mttkrp`` call afterwards is one jitted
+    dispatch with zero host-side work.  The reservation defaults to the
+    largest launch rounded up to the ``LANE`` multiple (memory-tight: these
+    buffers are private to one tensor, unlike the streaming regime's
+    power-of-two cross-tensor buckets).
+
+    Padding waste is bounded by construction: ``build_blco`` splits every
+    block to ``max_nnz_per_block`` and greedily batches blocks into
+    launches up to the same budget, so all launches except the final tail
+    are at least ``budget - max_block`` nnz — stacking to the max-launch
+    reservation is within a small constant of the tight footprint (there is
+    no "one huge launch + many tiny ones" shape to blow it up).
+    """
+
+    def __init__(self, hi, lo, vals, bases, *, re_fields: tuple,
+                 re_shifts: tuple, dims: tuple):
+        self.hi = hi                    # (L, R) uint32
+        self.lo = lo                    # (L, R) uint32
+        self.vals = vals                # (L, R) float
+        self.bases = bases              # (L, R, N) int32
+        self.re_fields = tuple(re_fields)
+        self.re_shifts = tuple(re_shifts)
+        self.dims = tuple(dims)
+        self.closed = False
+
+    # ------------------------------------------------------------ construct
+    @classmethod
+    def from_blco(cls, blco: BLCOTensor,
+                  reservation_nnz: int | None = None) -> "LaunchCache":
+        """Pad + stack + upload every launch of ``blco`` (host work, once)."""
+        from .streaming import prepare_chunks
+        max_launch = max((l.nnz for l in blco.launches), default=1)
+        res = int(reservation_nnz) if reservation_nnz else \
+            pad_multiple(max_launch)
+        if res < max_launch:
+            raise ValueError(f"reservation {res} smaller than largest "
+                             f"launch ({max_launch} nnz)")
+        chunks = prepare_chunks(blco, res)
+        return cls.from_chunks(chunks, blco, reservation_nnz=res)
+
+    @classmethod
+    def from_chunks(cls, chunks, blco: BLCOTensor, *,
+                    reservation_nnz: int) -> "LaunchCache":
+        """Stack already reservation-padded chunks (e.g. a service handle's)."""
+        n_launch = len(chunks)
+        res = int(reservation_nnz)
+        order = blco.order
+        if n_launch:
+            hi = np.stack([c[0] for c in chunks])
+            lo = np.stack([c[1] for c in chunks])
+            vals = np.stack([c[2] for c in chunks])
+            bases = np.stack([c[3] for c in chunks])
+        else:
+            hi = np.zeros((0, res), np.uint32)
+            lo = np.zeros((0, res), np.uint32)
+            vals = np.zeros((0, res), blco.values.dtype)
+            bases = np.zeros((0, res, order), np.int32)
+        return cls(jnp.asarray(hi), jnp.asarray(lo), jnp.asarray(vals),
+                   jnp.asarray(bases), re_fields=blco.re.field_bits,
+                   re_shifts=blco.re.field_shift, dims=blco.dims)
+
+    # ------------------------------------------------------------ introspect
+    @property
+    def num_launches(self) -> int:
+        return int(self.hi.shape[0])
+
+    @property
+    def reservation(self) -> int:
+        return int(self.hi.shape[1])
+
+    @property
+    def order(self) -> int:
+        return len(self.dims)
+
+    def device_bytes(self) -> int:
+        """Exact resident footprint: hi + lo + vals + bases (stacked)."""
+        if self.closed:
+            return 0
+        return int(self.hi.nbytes + self.lo.nbytes + self.vals.nbytes
+                   + self.bases.nbytes)
+
+    def flat(self):
+        """Device-side flat views: (T,) hi/lo/vals + (T, N) bases with
+        ``T = L * reservation`` — the fused Pallas pipeline's input stream."""
+        t = self.num_launches * self.reservation
+        return (self.hi.reshape(t), self.lo.reshape(t), self.vals.reshape(t),
+                self.bases.reshape(t, self.order))
+
+    # --------------------------------------------------------------- compute
+    def mttkrp(self, factors, mode: int, *, resolution: str = "auto",
+               copies: int = DEFAULT_COPIES):
+        """Single-dispatch MTTKRP (XLA scan path) from the cached launches."""
+        if self.closed:
+            raise RuntimeError("launch cache is closed")
+        assert 0 <= mode < self.order
+        if resolution == "auto":
+            resolution = choose_resolution(self.dims[mode])
+        factors = tuple(jnp.asarray(f) for f in factors)
+        if self.num_launches == 0:
+            rank = factors[0].shape[1]
+            return jnp.zeros((self.dims[mode], rank), factors[0].dtype)
+        record_dispatch()
+        return stacked_mttkrp(
+            self.hi, self.lo, self.vals, self.bases, factors,
+            re_fields=self.re_fields, re_shifts=self.re_shifts, mode=mode,
+            out_rows=self.dims[mode], resolution=resolution, copies=copies)
+
+    # ---------------------------------------------------------------- release
+    def delete(self) -> None:
+        """Release the device buffers (the cache must not be used after)."""
+        self.closed = True
+        for arr in (self.hi, self.lo, self.vals, self.bases):
+            try:
+                arr.delete()
+            except Exception:   # already deleted / backend without delete()
+                pass
+
+
+def launch_cache_bytes(blco: BLCOTensor) -> int:
+    """Predicted device footprint of a ``LaunchCache`` for ``blco``:
+    L stacked launches x (hi + lo + vals + bases) at the LANE-multiple
+    reservation — what ``DeviceBLCO``/``InMemoryPlan`` actually hold."""
+    if not blco.launches:
+        return 0
+    max_launch = max(l.nnz for l in blco.launches)
+    res = pad_multiple(max_launch, LANE)
+    per_elem = 4 + 4 + blco.values.dtype.itemsize + 4 * blco.order
+    return len(blco.launches) * res * per_elem

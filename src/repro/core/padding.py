@@ -1,0 +1,38 @@
+"""Shared launch-padding arithmetic (one home for the repo's three copies).
+
+Every execution path pads launches to a fixed *reservation* so device
+buffer shapes (and therefore compiled executables) are reused — the JAX
+analogue of the paper's fixed per-queue memory reservations (§4.2).  Two
+roundings are in deliberate use:
+
+* ``next_pow2`` / ``pad_pow2`` — power-of-two buckets, so *different*
+  tensors whose largest launches land in the same bucket share one
+  compiled executable (the streaming regime's cross-tensor reuse);
+* ``pad_multiple`` — round up to a lane/tile multiple only, the memory-
+  tight choice for a device-resident copy whose shapes are private to one
+  tensor anyway (the in-memory regime).
+
+``LANE`` is the TPU lane count: nnz buffers are kept at a multiple of it
+so vector loads are aligned and every Pallas tile size that divides the
+reservation also divides the total.
+"""
+from __future__ import annotations
+
+import math
+
+LANE = 256
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (1 for n <= 1)."""
+    return 1 << max(0, math.ceil(math.log2(max(1, n))))
+
+
+def pad_pow2(n: int, floor: int = LANE) -> int:
+    """Power-of-two bucket for ``n``, never below ``floor``."""
+    return max(floor, next_pow2(n))
+
+
+def pad_multiple(n: int, multiple: int = LANE) -> int:
+    """Round ``n`` up to a multiple (minimum one multiple)."""
+    return max(multiple, -(-n // multiple) * multiple)

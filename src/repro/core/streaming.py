@@ -39,7 +39,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from .blco import BLCOTensor
+from .counters import record_dispatch
 from .mttkrp import launch_mttkrp, choose_resolution, DEFAULT_COPIES
+from .padding import next_pow2 as _next_pow2
 
 
 @dataclasses.dataclass
@@ -145,16 +147,23 @@ def prepare_chunks(blco: BLCOTensor, reservation_nnz: int):
 def stream_mttkrp(chunks, blco: BLCOTensor, factors, mode: int, *,
                   queues: int, resolution: str = "auto",
                   copies: int = DEFAULT_COPIES,
-                  stats: StreamStats | None = None):
+                  stats: StreamStats | None = None,
+                  kernel: str = "xla", interpret: bool = True):
     """Stream prepared reservation chunks through the launch kernel.
 
     Keeps up to ``queues`` H2D transfers in flight ahead of compute (the
     paper's queue overlap). ``chunks`` must all share one reservation shape
-    so every launch hits the same compiled executable.
+    so every launch hits the same compiled executable.  ``kernel`` selects
+    the per-chunk compute: the XLA reference dataflow or the fused
+    single-``pallas_call`` pipeline (``repro.kernels.fused``).
     """
     b = blco
     if resolution == "auto":
         resolution = choose_resolution(b.dims[mode])
+    from .mttkrp import validate_kernel
+    validate_kernel(kernel)
+    if kernel == "pallas":
+        from repro.kernels.fused import fused_mttkrp_flat
     factors = tuple(jnp.asarray(f) for f in factors)
     rank = factors[0].shape[1]
     out = jnp.zeros((b.dims[mode], rank), factors[0].dtype)
@@ -179,11 +188,20 @@ def stream_mttkrp(chunks, blco: BLCOTensor, factors, mode: int, *,
         if t_first_dispatch is None:
             t_first_dispatch = t0
         hi, lo, vals, bases = dev
-        out = out + launch_mttkrp(
-            hi, lo, vals, bases, factors,
-            re_fields=b.re.field_bits, re_shifts=b.re.field_shift,
-            mode=mode, out_rows=b.dims[mode],
-            resolution=resolution, copies=copies)
+        if kernel == "pallas":
+            # fused_mttkrp_flat records its own dispatch
+            out = out + fused_mttkrp_flat(
+                hi, lo, vals, bases, factors,
+                field_bits=b.re.field_bits, field_shifts=b.re.field_shift,
+                mode=mode, out_rows=b.dims[mode], resolution=resolution,
+                interpret=interpret)
+        else:
+            record_dispatch()
+            out = out + launch_mttkrp(
+                hi, lo, vals, bases, factors,
+                re_fields=b.re.field_bits, re_shifts=b.re.field_shift,
+                mode=mode, out_rows=b.dims[mode],
+                resolution=resolution, copies=copies)
         # host wall time of the (async) dispatch only — NOT device compute
         stats.dispatch_time_s += time.perf_counter() - t0
         stats.launches += 1
@@ -209,9 +227,10 @@ class OOMExecutor:
     """Streams a (host-resident) BLCO tensor through fixed device reservations."""
 
     def __init__(self, blco: BLCOTensor, *, queues: int = 4,
-                 reservation_nnz: int | None = None):
+                 reservation_nnz: int | None = None, kernel: str = "xla"):
         self.blco = blco
         self.queues = queues
+        self.kernel = kernel
         self.spec = reservation_for(blco, reservation_nnz)
         self._prepared = prepare_chunks(blco, self.spec.nnz)
         self.stats = EngineStats(backend="streamed")
@@ -224,11 +243,5 @@ class OOMExecutor:
                copies: int = DEFAULT_COPIES):
         return stream_mttkrp(self._prepared, self.blco, factors, mode,
                              queues=self.queues, resolution=resolution,
-                             copies=copies, stats=self.stats)
-
-
-def _next_pow2(n: int) -> int:
-    p = 1
-    while p < n:
-        p <<= 1
-    return p
+                             copies=copies, stats=self.stats,
+                             kernel=self.kernel)

@@ -10,7 +10,11 @@ fixed reservations), ShardedPlan (mesh scale-out), BaselinePlan
 (COO/F-COO/CSF parity).  ``plan_for`` implements the paper's regime
 decision; the ``MTTKRPEngine``/``ExecutionPlan`` protocols let higher
 layers (the multi-tenant service) substitute pooled variants.
+
+In-memory and streamed plans take ``kernel="xla"`` (reference dataflow)
+or ``kernel="pallas"`` (fused single-``pallas_call`` pipeline).
 """
+from repro.core.mttkrp import KERNELS
 from repro.core.streaming import EngineStats
 
 from .api import ExecutionPlan, MTTKRPEngine, factor_bytes, in_memory_bytes
@@ -22,5 +26,6 @@ __all__ = [
     "EngineStats", "ExecutionPlan", "MTTKRPEngine",
     "factor_bytes", "in_memory_bytes", "sharded_bytes",
     "InMemoryPlan", "StreamedPlan", "ShardedPlan", "BaselinePlan",
-    "BASELINE_KINDS", "AUTO_BACKENDS", "DefaultEngine", "plan_for",
+    "BASELINE_KINDS", "AUTO_BACKENDS", "KERNELS", "DefaultEngine",
+    "plan_for",
 ]

@@ -72,6 +72,7 @@ def factor_bytes(dims, rank: int, dtype) -> int:
 
 def in_memory_bytes(blco: BLCOTensor) -> int:
     """Predicted device footprint of an ``InMemoryPlan`` for ``blco``:
-    hi + lo + vals + bases, padded to the lane multiple ``DeviceBLCO`` uses."""
-    padded = -(-blco.nnz // 256) * 256
-    return padded * (4 + 4 + blco.values.dtype.itemsize + 4 * blco.order)
+    the stacked launch cache's hi + lo + vals + bases — L launches padded
+    to the lane-multiple reservation, exactly what ``DeviceBLCO`` holds."""
+    from repro.core.launches import launch_cache_bytes
+    return launch_cache_bytes(blco)

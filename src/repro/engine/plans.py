@@ -17,12 +17,14 @@ reason about *measured* footprints instead of padded worst cases.
 """
 from __future__ import annotations
 
+import time
+
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import baselines
 from repro.core.blco import BLCOTensor, decode_coords
-from repro.core.mttkrp import DEFAULT_COPIES, DeviceBLCO
+from repro.core.mttkrp import DEFAULT_COPIES, DeviceBLCO, validate_kernel
 from repro.core.streaming import (EngineStats, ReservationSpec,
                                   prepare_chunks, reservation_for,
                                   stream_mttkrp)
@@ -32,34 +34,54 @@ from .api import in_memory_bytes
 
 
 class InMemoryPlan:
-    """Device-resident plan: the whole BLCO tensor lives in device memory."""
+    """Device-resident plan: the whole BLCO tensor lives in device memory.
+
+    The launch cache is built once at plan creation; every ``mttkrp`` call
+    afterwards is exactly ONE jitted dispatch (``kernel="xla"``: a
+    ``lax.scan`` over the stacked launches; ``kernel="pallas"``: the fused
+    single-``pallas_call`` pipeline) with zero host-side work.  Calls are
+    fenced (``block_until_ready``) so ``EngineStats`` records the same
+    dispatch-vs-device timing split the streamed plan does.
+    """
 
     backend = "in_memory"
 
     def __init__(self, blco: BLCOTensor, *, resolution: str = "auto",
                  copies: int = DEFAULT_COPIES, device: DeviceBLCO | None = None,
-                 owns_device: bool = True):
+                 owns_device: bool = True, kernel: str = "xla",
+                 interpret: bool = True):
+        validate_kernel(kernel)
         self.dims = blco.dims
         self.resolution = resolution
         self.copies = copies
+        self.kernel = kernel
         self._owns_device = owns_device if device is not None else True
         self._dev: DeviceBLCO | None = device if device is not None \
-            else DeviceBLCO(blco)
+            else DeviceBLCO(blco, kernel=kernel, interpret=interpret)
         self._stats = EngineStats(backend=self.backend)
         if device is None:
             # the one H2D transfer of this regime: the initial upload
             self._stats.h2d_bytes += self._dev.device_bytes()
-            self._stats.launches += 1
 
     def mttkrp(self, factors, mode: int, *, resolution: str | None = None,
                copies: int | None = None):
         if self._dev is None:
             raise RuntimeError("plan is closed")
-        self._stats.mttkrp_calls += 1
-        return self._dev.mttkrp(
-            factors, mode,
+        t0 = time.perf_counter()
+        out = self._dev.mttkrp(
+            factors, mode, kernel=self.kernel,
             resolution=resolution if resolution is not None else self.resolution,
             copies=copies if copies is not None else self.copies)
+        # host wall time of the (async) dispatch vs the fenced device span
+        self._stats.dispatch_time_s += time.perf_counter() - t0
+        if hasattr(out, "block_until_ready"):
+            out.block_until_ready()
+        dt = time.perf_counter() - t0
+        self._stats.device_time_s += dt
+        self._stats.total_time_s += dt
+        self._stats.mttkrp_calls += 1
+        self._stats.launches += 1            # one fused dispatch per call
+        return out
 
     def device_bytes(self) -> int:
         return self._dev.device_bytes() if self._dev is not None else 0
@@ -86,12 +108,16 @@ class StreamedPlan:
                  reservation_nnz: int | None = None,
                  spec: ReservationSpec | None = None,
                  chunks: list | None = None,
-                 resolution: str = "auto", copies: int = DEFAULT_COPIES):
+                 resolution: str = "auto", copies: int = DEFAULT_COPIES,
+                 kernel: str = "xla", interpret: bool = True):
+        validate_kernel(kernel)
         self.blco = blco
         self.dims = blco.dims
         self.queues = queues
         self.resolution = resolution
         self.copies = copies
+        self.kernel = kernel
+        self.interpret = interpret
         self.spec = spec if spec is not None \
             else reservation_for(blco, reservation_nnz)
         self._chunks = chunks if chunks is not None \
@@ -107,7 +133,7 @@ class StreamedPlan:
             self._chunks, self.blco, factors, mode, queues=self.queues,
             resolution=resolution if resolution is not None else self.resolution,
             copies=copies if copies is not None else self.copies,
-            stats=self._stats)
+            stats=self._stats, kernel=self.kernel, interpret=self.interpret)
 
     def device_bytes(self) -> int:
         """Reservation bytes in flight (the only device-resident state)."""

@@ -19,7 +19,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core.blco import BLCOTensor
-from repro.core.mttkrp import DEFAULT_COPIES
+from repro.core.mttkrp import DEFAULT_COPIES, validate_kernel
 from repro.core.streaming import reservation_for
 from repro.dist.context import get_mesh
 
@@ -34,17 +34,25 @@ def plan_for(blco: BLCOTensor, device_budget_bytes: int, *, rank: int,
              dtype=jnp.float32, backend: str = "auto", mesh=None,
              queues: int = 4, reservation_nnz: int | None = None,
              tensor=None, resolution: str = "auto",
-             copies: int = DEFAULT_COPIES):
+             copies: int = DEFAULT_COPIES, kernel: str = "xla",
+             interpret: bool = True):
     """Build the ExecutionPlan for ``blco`` under ``device_budget_bytes``.
 
     ``tensor`` (the original SparseTensor) is only consulted for baseline
     backends; without it the coordinates are decoded from the BLCO copy.
-    Raises ValueError when no regime fits the budget.
+    ``kernel`` selects the compute path for the in-memory and streamed
+    regimes: ``"xla"`` (reference dataflow, scan over the launch cache) or
+    ``"pallas"`` (fused single-``pallas_call`` pipeline; ``interpret=False``
+    on a real TPU).  Raises ValueError when no regime fits the budget.
     """
     if backend not in AUTO_BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; "
                          f"expected one of {AUTO_BACKENDS}")
+    validate_kernel(kernel)
     if backend in BASELINE_KINDS:
+        if kernel != "xla":
+            raise ValueError(f"kernel={kernel!r} is not supported on "
+                             f"baseline backends; use kernel='xla'")
         return BaselinePlan.from_tensor(tensor, backend) \
             if tensor is not None else BaselinePlan.from_blco(blco, backend)
 
@@ -54,6 +62,9 @@ def plan_for(blco: BLCOTensor, device_budget_bytes: int, *, rank: int,
         if mesh is None:
             raise ValueError("backend='sharded' requires an active mesh "
                              "(repro.dist.context.set_mesh) or mesh=...")
+        if kernel != "xla":
+            raise ValueError("kernel='pallas' is not supported on the "
+                             "sharded backend yet; use kernel='xla'")
         need = sharded_bytes(blco, mesh) + working
         if need > device_budget_bytes:
             raise ValueError(
@@ -70,7 +81,8 @@ def plan_for(blco: BLCOTensor, device_budget_bytes: int, *, rank: int,
                 f"in-memory plan needs {in_memory_bytes(blco) + working} B "
                 f"resident (tensor + factors) but the device budget is "
                 f"{device_budget_bytes} B")
-        return InMemoryPlan(blco, resolution=resolution, copies=copies)
+        return InMemoryPlan(blco, resolution=resolution, copies=copies,
+                            kernel=kernel, interpret=interpret)
 
     spec = reservation_for(blco, reservation_nnz)
     if spec.bytes_in_flight(queues) + working > device_budget_bytes:
@@ -80,22 +92,27 @@ def plan_for(blco: BLCOTensor, device_budget_bytes: int, *, rank: int,
             f"(reservation {spec.nnz} nnz x {queues} queues + factors) "
             f"but the device budget is {device_budget_bytes} B")
     return StreamedPlan(blco, queues=queues, spec=spec,
-                        resolution=resolution, copies=copies)
+                        resolution=resolution, copies=copies,
+                        kernel=kernel, interpret=interpret)
 
 
 class DefaultEngine:
     """MTTKRPEngine over ``plan_for`` with fixed streaming configuration."""
 
     def __init__(self, *, queues: int = 4, mesh=None, backend: str = "auto",
-                 reservation_nnz: int | None = None):
+                 reservation_nnz: int | None = None, kernel: str = "xla",
+                 interpret: bool = True):
         self.queues = queues
         self.mesh = mesh
         self.backend = backend
         self.reservation_nnz = reservation_nnz
+        self.kernel = kernel
+        self.interpret = interpret
 
     def plan(self, blco: BLCOTensor, *, device_budget_bytes: int, rank: int,
              dtype=jnp.float32):
         return plan_for(blco, device_budget_bytes, rank=rank, dtype=dtype,
                         backend=self.backend, mesh=self.mesh,
                         queues=self.queues,
-                        reservation_nnz=self.reservation_nnz)
+                        reservation_nnz=self.reservation_nnz,
+                        kernel=self.kernel, interpret=self.interpret)

@@ -1,7 +1,15 @@
 """Pallas TPU kernels for the BLCO MTTKRP hot path (validated in interpret
-mode on CPU; TARGET is TPU v5e)."""
-from .ops import pallas_mttkrp
-from .delinearize import delinearize
+mode on CPU; TARGET is TPU v5e).
+
+``pallas_mttkrp`` / ``fused_cache_mttkrp`` run the whole pipeline as one
+fused ``pallas_call`` per tile in a single jitted dispatch, driven by the
+device-resident launch cache; ``pallas_mttkrp_phases`` keeps the three-
+dispatch PR-2 pipeline as the benchmark reference."""
+from .ops import (pallas_mttkrp, pallas_mttkrp_phases, fused_mttkrp_flat,
+                  fused_cache_mttkrp)
+from .delinearize import delinearize, extract_field_words
 from .blco_mttkrp import mttkrp_segments, mttkrp_stash
 
-__all__ = ["pallas_mttkrp", "delinearize", "mttkrp_segments", "mttkrp_stash"]
+__all__ = ["pallas_mttkrp", "pallas_mttkrp_phases", "fused_mttkrp_flat",
+           "fused_cache_mttkrp", "delinearize", "extract_field_words",
+           "mttkrp_segments", "mttkrp_stash"]

@@ -19,25 +19,34 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
+def extract_field_words(hi, lo, shift: int, width: int):
+    """One mode's field from (hi, lo) uint32 word pairs — 32-bit ops only.
+
+    Shared by the standalone delinearize kernel and the fused MTTKRP
+    pipeline (``repro.kernels.fused``); shift/width are static per mode.
+    """
+    if width == 0:
+        return jnp.zeros_like(lo)
+    if shift >= 32:                        # entirely in hi word
+        mask = jnp.uint32((1 << width) - 1) if width < 32 else jnp.uint32(0xFFFFFFFF)
+        return (hi >> jnp.uint32(shift - 32)) & mask
+    if shift + width <= 32:                # entirely in lo word
+        mask = jnp.uint32((1 << width) - 1) if width < 32 else jnp.uint32(0xFFFFFFFF)
+        return (lo >> jnp.uint32(shift)) & mask
+    # straddles: stitch both words
+    lo_bits = 32 - shift
+    lo_part = lo >> jnp.uint32(shift)
+    hi_part = hi & jnp.uint32((1 << (shift + width - 32)) - 1)
+    field = lo_part | (hi_part << jnp.uint32(lo_bits))
+    return field & jnp.uint32((1 << width) - 1)
+
+
 def _kernel(hi_ref, lo_ref, bases_ref, out_ref, *, field_bits, field_shifts):
     hi = hi_ref[...]
     lo = lo_ref[...]
     cols = []
     for n, (shift, width) in enumerate(zip(field_shifts, field_bits)):
-        if width == 0:
-            field = jnp.zeros_like(lo)
-        elif shift >= 32:                      # entirely in hi word
-            mask = jnp.uint32((1 << width) - 1) if width < 32 else jnp.uint32(0xFFFFFFFF)
-            field = (hi >> jnp.uint32(shift - 32)) & mask
-        elif shift + width <= 32:              # entirely in lo word
-            mask = jnp.uint32((1 << width) - 1) if width < 32 else jnp.uint32(0xFFFFFFFF)
-            field = (lo >> jnp.uint32(shift)) & mask
-        else:                                  # straddles: stitch both words
-            lo_bits = 32 - shift
-            lo_part = lo >> jnp.uint32(shift)
-            hi_part = hi & jnp.uint32((1 << (shift + width - 32)) - 1)
-            field = lo_part | (hi_part << jnp.uint32(lo_bits))
-            field = field & jnp.uint32((1 << width) - 1)
+        field = extract_field_words(hi, lo, shift, width)
         cols.append(field.astype(jnp.int32) + bases_ref[:, n])
     out_ref[...] = jnp.stack(cols, axis=1)
 

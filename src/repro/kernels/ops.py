@@ -1,17 +1,19 @@
-"""Jit'd public wrappers around the Pallas BLCO-MTTKRP kernels.
+"""Public wrappers around the Pallas BLCO-MTTKRP kernels.
 
 ``pallas_mttkrp`` is a drop-in replacement for ``repro.core.mttkrp.mttkrp``:
 same BLCOTensor in, same (I_mode, R) out, validated against the same dense
-oracle. The pipeline per launch is the paper's two phases:
+oracle.  It is driven by the device-resident launch cache
+(``repro.core.launches.LaunchCache``) and executes the ENTIRE pipeline —
+delinearize -> factor-row gather -> hadamard -> on-the-fly segmented
+reduction — as one fused ``pallas_call`` per tile inside a single jitted
+dispatch (``repro.kernels.fused``): zero per-call host padding, no
+HBM-materialized intermediates.
 
-  1. processing: ``delinearize`` kernel (shift+mask on uint32 word pairs);
-  2. gather:     non-target factor rows via XLA's native gather (on TPU this
-                 is the hardware-optimized path; the GPU paper's coalesced
-                 loads have no direct Pallas analogue — DESIGN.md §2);
-  3. computing:  fused hadamard + on-the-fly segmented reduction kernel —
-                 ``stash`` variant when the target mode is short (the §5.3
-                 heuristic), ``segment`` variant + one-update-per-segment
-                 scatter otherwise.
+``pallas_mttkrp_phases`` keeps the PR-2 three-phase pipeline (standalone
+delinearize kernel -> XLA gather -> compute kernel, each phase round-
+tripping through HBM) as the benchmark reference the fused path is
+measured against in ``BENCH_3.json``.  It too is cache-driven — the host
+numpy padding it used to redo every call is gone.
 
 ``interpret`` defaults to True (CPU validation container); pass False on TPU.
 """
@@ -20,66 +22,74 @@ from __future__ import annotations
 import math
 
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.blco import BLCOTensor
-from repro.core.mttkrp import choose_resolution, CONTENTION_THRESHOLD
+from repro.core.counters import record_dispatch
+from repro.core.mttkrp import choose_resolution, launch_cache_for
 
 from .delinearize import delinearize
 from .blco_mttkrp import mttkrp_segments, mttkrp_stash
+from .fused import (STASH_MAX_ROWS, fused_cache_mttkrp, fused_mttkrp_flat)
 from .ref import scatter_segments_ref
-
-
-def _pad_pow2(n: int, floor: int) -> int:
-    return max(floor, 1 << math.ceil(math.log2(max(1, n))))
 
 
 def pallas_mttkrp(blco: BLCOTensor, factors, mode: int, *,
                   tile: int = 256, interpret: bool = True,
-                  resolution: str = "auto"):
-    """Full mode-n MTTKRP over all launches, Pallas path."""
+                  resolution: str = "auto", cache=None):
+    """Full mode-n MTTKRP, fused single-dispatch Pallas path.
+
+    The launch cache is built once (attached to ``blco``, or passed in);
+    every call afterwards is one jitted dispatch over the cached stream.
+    """
     assert 0 <= mode < blco.order
+    cache = cache if cache is not None else launch_cache_for(blco)
+    return fused_cache_mttkrp(cache, factors, mode, resolution=resolution,
+                              tile=tile, interpret=interpret)
+
+
+def pallas_mttkrp_phases(blco: BLCOTensor, factors, mode: int, *,
+                         tile: int = 256, interpret: bool = True,
+                         resolution: str = "auto", cache=None):
+    """The PR-2 three-phase Pallas pipeline (benchmark reference).
+
+    Per call: delinearize kernel -> HBM coords -> XLA gather -> HBM rows ->
+    compute kernel -> per-segment scatter.  Cache-driven (no host numpy),
+    but the intermediates still round-trip through device memory and the
+    phases are separate dispatches — exactly what the fused path removes.
+    """
+    assert 0 <= mode < blco.order
+    cache = cache if cache is not None else launch_cache_for(blco)
     factors = tuple(jnp.asarray(f) for f in factors)
     rank = factors[0].shape[1]
-    out = jnp.zeros((blco.dims[mode], rank), factors[0].dtype)
     if resolution == "auto":
         resolution = choose_resolution(blco.dims[mode])
     use_stash = (resolution == "hierarchical"
-                 and blco.dims[mode] <= 4 * CONTENTION_THRESHOLD)
+                 and blco.dims[mode] <= STASH_MAX_ROWS)
+    if cache.num_launches == 0:
+        return jnp.zeros((blco.dims[mode], rank), factors[0].dtype)
 
-    bases_all = blco.block_upper_bases()
-    block_ids = blco.element_block_ids()
-    re = blco.re
-    for launch in blco.launches:
-        s, e = launch.start, launch.end
-        n = e - s
-        padded = _pad_pow2(n, tile)
-        hi = np.zeros(padded, np.uint32); hi[:n] = blco.idx_hi[s:e]
-        lo = np.zeros(padded, np.uint32); lo[:n] = blco.idx_lo[s:e]
-        vals = np.zeros(padded, np.float32); vals[:n] = blco.values[s:e]
-        bases = np.zeros((padded, blco.order), np.int32)
-        bases[:n] = bases_all[block_ids[s:e]]
+    hi, lo, vals, bases = cache.flat()
+    t = int(hi.shape[0])
+    tile = math.gcd(t, max(1, min(tile, t)))   # largest dividing tile
+    record_dispatch(3)          # three separate device phases per call
 
-        # phase 1: processing (Pallas delinearize kernel)
-        coords = delinearize(jnp.asarray(hi), jnp.asarray(lo),
-                             jnp.asarray(bases),
-                             field_bits=re.field_bits,
-                             field_shifts=re.field_shift,
-                             tile=min(1024, padded), interpret=interpret)
-        # phase 2: gather non-target rows (XLA native gather)
-        gathered = tuple(jnp.take(factors[m], coords[:, m], axis=0)
-                         for m in range(blco.order) if m != mode)
-        tgt = coords[:, mode]
-        v = jnp.asarray(vals)
+    # phase 1: processing (standalone Pallas delinearize kernel)
+    coords = delinearize(hi, lo, bases, field_bits=cache.re_fields,
+                         field_shifts=cache.re_shifts, tile=tile,
+                         interpret=interpret)
+    # phase 2: gather non-target rows (XLA native gather, HBM round-trip)
+    gathered = tuple(jnp.take(factors[m], coords[:, m], axis=0)
+                     for m in range(blco.order) if m != mode)
+    tgt = coords[:, mode]
 
-        # phase 3: computing (fused Pallas kernel)
-        if use_stash:
-            out = out + mttkrp_stash(v, tgt, gathered,
-                                     out_rows=blco.dims[mode],
-                                     tile=tile, interpret=interpret)
-        else:
-            seg_tgt, seg_sums = mttkrp_segments(v, tgt, gathered,
-                                                tile=tile, interpret=interpret)
-            out = out + scatter_segments_ref(seg_tgt, seg_sums,
-                                             blco.dims[mode])
-    return out
+    # phase 3: computing (Pallas kernel) + final update
+    if use_stash:
+        return mttkrp_stash(vals, tgt, gathered, out_rows=blco.dims[mode],
+                            tile=tile, interpret=interpret)
+    seg_tgt, seg_sums = mttkrp_segments(vals, tgt, gathered, tile=tile,
+                                        interpret=interpret)
+    return scatter_segments_ref(seg_tgt, seg_sums, blco.dims[mode])
+
+
+__all__ = ["pallas_mttkrp", "pallas_mttkrp_phases", "fused_mttkrp_flat",
+           "fused_cache_mttkrp"]

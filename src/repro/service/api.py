@@ -74,9 +74,10 @@ class DecompositionService:
     """Multi-tenant decomposition service over pooled execution plans."""
 
     def __init__(self, *, device_budget_bytes: int = DEFAULT_DEVICE_BUDGET,
-                 queues: int = 4, max_active: int | None = None):
+                 queues: int = 4, max_active: int | None = None,
+                 kernel: str = "xla"):
         self.registry = TensorRegistry()
-        self.engine = ServiceEngine(queues=queues)
+        self.engine = ServiceEngine(queues=queues, kernel=kernel)
         self.metrics = ServiceMetrics()
         self.scheduler = sched.JobScheduler(
             self.engine, device_budget_bytes=device_budget_bytes,

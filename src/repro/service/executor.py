@@ -55,7 +55,7 @@ class PooledStreamedPlan(StreamedPlan):
     def __init__(self, engine: "ServiceEngine", handle: TensorHandle,
                  held_bytes: int):
         super().__init__(handle.blco, queues=engine.queues, spec=handle.spec,
-                         chunks=handle.chunks)
+                         chunks=handle.chunks, kernel=engine.kernel)
         self._engine = engine
         self._held = held_bytes
 
@@ -77,13 +77,13 @@ class PooledInMemoryPlan(InMemoryPlan):
 
     def __init__(self, engine: "ServiceEngine", handle: TensorHandle,
                  entry: ResidentEntry, held_bytes: int):
-        super().__init__(handle.blco, device=entry.device, owns_device=False)
+        super().__init__(handle.blco, device=entry.device, owns_device=False,
+                         kernel=engine.kernel)
         self._engine = engine
         self._entry = entry
         self._held = held_bytes
         if held_bytes:                      # this plan paid for the upload
             self._stats.h2d_bytes += held_bytes
-            self._stats.launches += 1
 
     def device_bytes(self) -> int:
         return 0 if self._dev is None else self._held
@@ -98,8 +98,9 @@ class PooledInMemoryPlan(InMemoryPlan):
 class ServiceEngine:
     """Plans pooled execution for registered tensors under one device budget."""
 
-    def __init__(self, *, queues: int = 4):
+    def __init__(self, *, queues: int = 4, kernel: str = "xla"):
         self.queues = queues
+        self.kernel = kernel
         self._stream_pool: dict[ReservationSpec, PoolEntry] = {}
         self._resident_pool: dict[str, ResidentEntry] = {}
 
@@ -150,7 +151,7 @@ class ServiceEngine:
         entry = self._resident_pool.get(handle.key)
         held = 0
         if entry is None:
-            device = DeviceBLCO(handle.blco)
+            device = DeviceBLCO(handle.blco, kernel=self.kernel)
             entry = ResidentEntry(key=handle.key, device=device,
                                   bytes=device.device_bytes())
             self._resident_pool[handle.key] = entry

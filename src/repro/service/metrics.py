@@ -42,6 +42,7 @@ class JobMetrics:
             "cache_hit": self.cache_hit,
             "backend": self.backend,
             "h2d_bytes": self.stats.h2d_bytes,
+            "mttkrp_calls": self.stats.mttkrp_calls,
             "launches": self.stats.launches,
             "put_time_s": self.stats.put_time_s,
             "dispatch_time_s": self.stats.dispatch_time_s,

@@ -111,10 +111,14 @@ def test_fast_path_and_streaming_share_one_budget():
     assert svc.status(js).state == "done" and svc.status(jb).state == "done"
     assert m["peak_admitted_reservation_bytes"] <= budget
     assert m["admitted_reservation_bytes"] == 0
-    # the resident job paid one upload; the streamed job paid per-iteration
+    # launches count compute dispatches: the resident job issues exactly
+    # ONE fused dispatch per MTTKRP call (the launch-cache scan), while the
+    # streamed job pays one dispatch per reservation chunk per call
     rs, rb = svc.result(js).metrics, svc.result(jb).metrics
-    assert rs["backend"] == "in_memory" and rs["launches"] == 1
-    assert rb["backend"] == "streamed" and rb["launches"] > 3
+    assert rs["backend"] == "in_memory" and \
+        rs["launches"] == rs["mttkrp_calls"] > 0
+    assert rb["backend"] == "streamed" and \
+        rb["launches"] > rb["mttkrp_calls"] > 0
     # both still match a solo engine run on the same seeds
     b = core.build_blco(t_big, max_nnz_per_block=256)
     solo = plan_for(b, h_big.spec.bytes_in_flight(2)

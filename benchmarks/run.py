@@ -277,6 +277,110 @@ def bench_service(rows):
                  f"peak_res={m['peak_admitted_reservation_bytes']/1e6:.2f}MB)"))
 
 
+def bench_multitenant(rows, *, fast: bool = False,
+                      json_path: str | None = "BENCH_4.json") -> dict:
+    """Weighted multi-tenant serving through the async runtime (ISSUE 4).
+
+    Drives N concurrent tenants with mixed fair-share weights through
+    ``ServiceRuntime`` (worker thread + stride scheduler), ending together
+    by giving each tenant an iteration cap proportional to its weight, and
+    records per-tenant iterations/sec + achieved vs expected share into
+    ``BENCH_4.json``.  A sacrificial tenant is cancelled mid-run to record
+    the measured pooled-byte release of ``cancel()``.
+    """
+    from repro.service import (BuildParams, CancelJob, ServiceRuntime,
+                               SubmitDecomposition)
+    build = BuildParams(max_nnz_per_block=1 << 12)
+    t_small = core.paper_like("uber-like", seed=0)
+    t_big = core.paper_like("chicago-like", seed=0)
+    base_iters = 2 if fast else 6
+    rank = 8 if fast else 16
+    # mixed weights; the heavy tenant does proportionally more sweeps
+    tenants = [("heavy", 2.0, t_small), ("light-1", 1.0, t_small),
+               ("light-2", 1.0, t_big)]
+    total_w = sum(w for _, w, _ in tenants)
+
+    # untimed warm-up so compile time does not skew the shared run
+    warm = ServiceRuntime(device_budget_bytes=64 << 20, queues=4)
+    with warm:
+        for i, t in enumerate((t_small, t_big)):
+            warm.submit(SubmitDecomposition(tensor=t, rank=rank, iters=1,
+                                            tol=0.0, seed=i, build=build))
+        warm.drain(timeout=600)
+
+    with ServiceRuntime(device_budget_bytes=64 << 20, queues=4) as rt:
+        t0 = time.perf_counter()
+        job_tenant = {}
+        for i, (name, w, t) in enumerate(tenants):
+            job_tenant[rt.submit(SubmitDecomposition(
+                tensor=t, rank=rank, iters=int(base_iters * w), tol=0.0,
+                seed=i, build=build, tenant=name, weight=w))] = name
+        victim = rt.submit(SubmitDecomposition(
+            tensor=t_big, rank=rank, iters=10_000, tol=0.0, seed=9,
+            build=build, tenant="victim", weight=0.5))
+        vfeed = rt.subscribe(victim)
+        vfeed.get(timeout=600)               # victim really ran a sweep
+        freed = rt.cancel(CancelJob(job_id=victim)).freed_bytes
+        rt.unsubscribe(vfeed)
+        rt.drain(timeout=600)
+        wall = time.perf_counter() - t0
+        m = rt.service_metrics()
+        trace = list(rt.scheduler.trace)
+
+    # share is measured over the FIRST HALF of the weighted tenants'
+    # iteration trace — a window where no tenant has hit its cap yet, so
+    # an unfair scheduler (e.g. FIFO serialization) would visibly skew it;
+    # over the whole run the caps themselves would mask any unfairness
+    tenant_trace = [job_tenant[j] for j in trace if j in job_tenant]
+    window = tenant_trace[:len(tenant_trace) // 2] or tenant_trace
+    per_tenant: dict[str, dict] = {}
+    max_dev = 0.0
+    for name, w, t in tenants:
+        n = m["tenant_iterations"].get(name, 0)
+        expected = w / total_w
+        share = window.count(name) / len(window)
+        dev = abs(share - expected) / expected
+        max_dev = max(max_dev, dev)
+        per_tenant[name] = {
+            "weight": w, "nnz": t.nnz, "iterations": n,
+            "iters_per_sec": n / wall if wall > 0 else 0.0,
+            "share": share, "expected_share": expected,
+        }
+        rows.append((f"service4.{name}", wall / max(1, n) * 1e6,
+                     f"w={w} {n / wall:.2f}it/s share={share:.3f} "
+                     f"(want {expected:.3f})"))
+    rows.append(("service4.max_share_deviation", 0.0, f"{max_dev:.3f}"))
+    rows.append(("service4.cancel_freed_bytes", 0.0, f"{freed/1e6:.2f}MB"))
+    payload = {
+        "bench": "weighted_multi_tenant_service",
+        "fast_mode": fast,
+        "rank": rank,
+        "backend": _jax_backend(),
+        "note": ("N concurrent tenants with mixed stride-scheduling "
+                 "weights through the async ServiceRuntime; iteration caps "
+                 "proportional to weights so tenants finish together.  The "
+                 "achieved share is measured over the first half of the "
+                 "iteration trace (no tenant capped yet), so scheduler "
+                 "unfairness cannot hide behind the caps.  A sacrificial "
+                 "tenant is cancelled mid-run; freed bytes are the "
+                 "measured admission-budget release."),
+        "tenants": per_tenant,
+        "wall_s": wall,
+        "iterations_per_sec_total": m["iterations_total"] / wall
+        if wall > 0 else 0.0,
+        "max_share_deviation_vs_weights": max_dev,
+        "victim_iterations_before_cancel":
+            m["tenant_iterations"].get("victim", 0),
+        "cancelled_jobs": m["jobs_cancelled"],
+        "cancel_freed_bytes": freed,
+    }
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+    return payload
+
+
 def bench_dispatch(rows, *, fast: bool = False,
                    json_path: str | None = "BENCH_3.json") -> dict:
     """Single-dispatch launch-cache paths vs the PR-2 per-launch loop.
@@ -392,6 +496,9 @@ def main(argv=None) -> None:
     ap.add_argument("--json", default="BENCH_3.json", metavar="PATH",
                     help="where to write the machine-readable dispatch "
                          "bench (default: BENCH_3.json; '' disables)")
+    ap.add_argument("--mt-json", default="BENCH_4.json", metavar="PATH",
+                    help="where to write the weighted multi-tenant service "
+                         "bench (default: BENCH_4.json; '' disables)")
     args = ap.parse_args(argv)
 
     rows: list[tuple[str, float, str]] = []
@@ -404,6 +511,7 @@ def main(argv=None) -> None:
         bench_embed_grad(rows)
         bench_service(rows)
     bench_dispatch(rows, fast=args.fast, json_path=args.json or None)
+    bench_multitenant(rows, fast=args.fast, json_path=args.mt_json or None)
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")

@@ -7,10 +7,16 @@ device through the service layer, under ONE measured byte budget:
   path** (one pooled DeviceBLCO copy, zero per-iteration H2D) while the
   larger tensor **streams** through pooled fixed reservations;
 * the repeated tensor is a BLCO construction-cache hit (one shared copy)
-  AND a residency-pool hit (its second tenant is admitted for 0 bytes);
-* admission charges exactly ``plan.device_bytes()`` — measured, not a
-  padded worst case;
+  AND a residency-pool hit (its second tenant only pays its per-job factor
+  working set);
+* admission charges exactly ``plan.device_bytes()`` — the pooled tensor
+  state once, plus each job's private factor working set;
 * results are bit-identical to a solo run through the same engine regime.
+
+A second act drives the **async runtime**: the same workload submitted to
+``ServiceRuntime`` with per-tenant weights (tenant A at weight 2 gets twice
+the sweeps), a streamed status feed, and a mid-run cancellation that
+measurably frees pooled bytes.
 
     PYTHONPATH=src python examples/serve_td.py
 """
@@ -18,7 +24,8 @@ import numpy as np
 
 from repro import core
 from repro.engine import factor_bytes, in_memory_bytes, plan_for
-from repro.service import BuildParams, DecompositionService, SubmitDecomposition
+from repro.service import (BuildParams, CancelJob, DecompositionService,
+                           ServiceRuntime, SubmitDecomposition)
 
 build = BuildParams(max_nnz_per_block=1 << 12)   # small blocks -> real streaming
 t_uber = core.paper_like("uber-like", seed=0)
@@ -26,28 +33,38 @@ t_chicago = core.paper_like("chicago-like", seed=0)
 t_uber_again = core.paper_like("uber-like", seed=0)   # same content, new object
 
 # size the budget so uber fits device-resident but chicago must stream:
-# uber's resident copy + the factor working set + one pooled reservation
+# uber's resident copy + a working set per job + one pooled reservation
 # set for chicago, with headroom well below chicago's residency cost
-from repro.core.streaming import reservation_for
-
 b_uber = core.build_blco(t_uber, max_nnz_per_block=1 << 12)
 b_chicago = core.build_blco(t_chicago, max_nnz_per_block=1 << 12)
+from repro.core.streaming import reservation_for
+
 chicago_stream = reservation_for(b_chicago).bytes_in_flight(4)
-headroom = chicago_stream + (128 << 10)
-assert headroom < in_memory_bytes(b_chicago)   # chicago can never go resident
-assert headroom >= factor_bytes(t_uber.dims, 16, np.float32)  # uber can
-budget = in_memory_bytes(b_uber) + headroom
+fb_uber = factor_bytes(t_uber.dims, 8, np.float32)
+fb_ch16 = factor_bytes(t_chicago.dims, 16, np.float32)
+fb_ch8 = factor_bytes(t_chicago.dims, 8, np.float32)
+budget = in_memory_bytes(b_uber) + 2 * fb_uber \
+    + chicago_stream + fb_ch16 + fb_ch8 + (32 << 10)
+# chicago can never go resident: when its first job is admitted (tenantA's
+# uber copy + working set already held), the remaining budget is below
+# chicago's residency cost + its working set
+assert budget - in_memory_bytes(b_uber) - fb_uber \
+    < in_memory_bytes(b_chicago) + fb_ch16
 
 svc = DecompositionService(device_budget_bytes=budget, queues=4)
 jobs = {
     "tenantA/uber":     svc.submit(SubmitDecomposition(
-        tensor=t_uber, rank=16, iters=6, seed=1, build=build)),
+        tensor=t_uber, rank=8, iters=6, seed=1, build=build,
+        tenant="tenantA")),
     "tenantB/chicago":  svc.submit(SubmitDecomposition(
-        tensor=t_chicago, rank=16, iters=6, seed=2, build=build)),
+        tensor=t_chicago, rank=16, iters=6, seed=2, build=build,
+        tenant="tenantB")),
     "tenantC/uber":     svc.submit(SubmitDecomposition(
-        tensor=t_uber_again, rank=16, iters=6, seed=1, build=build)),
+        tensor=t_uber_again, rank=8, iters=6, seed=1, build=build,
+        tenant="tenantC")),
     "tenantB/chicago8": svc.submit(SubmitDecomposition(
-        tensor=t_chicago, rank=8, iters=6, seed=3, build=build)),
+        tensor=t_chicago, rank=8, iters=6, seed=3, build=build,
+        tenant="tenantB")),
 }
 print(f"submitted {len(jobs)} jobs on 2 distinct tensors "
       f"(budget {budget/1e6:.1f} MB, {svc.engine.queues} queues)")
@@ -81,8 +98,8 @@ assert m["blco_cache_misses"] == 2     # one build per distinct tensor
 
 # the multi-tenant result is exactly the solo result through the same regime
 jid = jobs["tenantA/uber"]
-solo_plan = plan_for(b_uber, budget, rank=16, backend="in_memory")
-solo = core.cp_als(solo_plan, t_uber.dims, 16,
+solo_plan = plan_for(b_uber, budget, rank=8, backend="in_memory")
+solo = core.cp_als(solo_plan, t_uber.dims, 8,
                    norm_x=float(np.linalg.norm(t_uber.values)),
                    iters=6, seed=1)
 for a, b_ in zip(results[jid].result.factors, solo.factors):
@@ -90,3 +107,47 @@ for a, b_ in zip(results[jid].result.factors, solo.factors):
                                rtol=1e-5, atol=1e-6)
 solo_plan.close()
 print("multi-tenant factors == solo engine factors (same seeds): OK")
+
+# ---------------------------------------------------------------------------
+# Act 2: the async runtime — weighted fair share, streaming status, cancel.
+# ---------------------------------------------------------------------------
+print("\n== async runtime (weighted shares + streaming + cancellation) ==")
+# three uber tenants (3 working sets) + one streaming chicago tenant
+budget2 = in_memory_bytes(b_uber) + 3 * fb_uber \
+    + chicago_stream + fb_ch16 + (32 << 10)
+assert chicago_stream + fb_ch16 + (32 << 10) \
+    < in_memory_bytes(b_chicago) + fb_ch16
+with ServiceRuntime(device_budget_bytes=budget2, queues=4) as rt:
+    feed = rt.subscribe()                       # all-jobs status stream
+    ja = rt.submit(SubmitDecomposition(tensor=t_uber, rank=8, iters=8,
+                                       tol=0.0, seed=1, build=build,
+                                       tenant="tenantA", weight=2.0))
+    jb = rt.submit(SubmitDecomposition(tensor=t_uber, rank=8, iters=4,
+                                       tol=0.0, seed=2, build=build,
+                                       tenant="tenantB", weight=1.0))
+    jc = rt.submit(SubmitDecomposition(tensor=t_uber, rank=8, iters=4,
+                                       tol=0.0, seed=3, build=build,
+                                       tenant="tenantC", weight=1.0))
+    victim = rt.submit(SubmitDecomposition(tensor=t_chicago, rank=16,
+                                           iters=10_000, tol=0.0, seed=4,
+                                           build=build, tenant="tenantD"))
+    first = feed.get(timeout=120)
+    print(f"  first streamed event: job={first.job_id} kind={first.kind} "
+          f"tenant={first.tenant}")
+    assert rt.status(victim).state == "running"   # admitted as streamed
+    held = rt.service.engine.pooled_bytes()
+    res = rt.cancel(CancelJob(job_id=victim))
+    print(f"  cancelled tenantD mid-run: freed {res.freed_bytes/1e6:.2f}MB "
+          f"(pooled {held/1e6:.2f}MB -> "
+          f"{rt.service.engine.pooled_bytes()/1e6:.2f}MB)")
+    assert res.cancelled and res.freed_bytes > 0
+    rt.drain(timeout=600)
+    rt.unsubscribe(feed)
+    mt = rt.service_metrics()
+print(f"  tenant iterations: {mt['tenant_iterations']} "
+      f"(weights A=2, B=C=1); cancellations={mt['jobs_cancelled']}")
+assert mt["tenant_iterations"]["tenantA"] == 8
+assert mt["tenant_iterations"]["tenantB"] == 4
+assert mt["tenant_iterations"]["tenantC"] == 4
+assert mt["jobs_cancelled"] == 1
+print("async runtime: weighted shares + measured cancellation: OK")

@@ -50,7 +50,9 @@ def stacked_mttkrp(hi, lo, vals, bases, factors, *,
     """
     factors = tuple(factors)
     rank = factors[0].shape[1]
-    out0 = jnp.zeros((out_rows, rank), factors[0].dtype)
+    # accumulate at the promoted precision: float64 tensor values against
+    # float32 factors must not be silently downcast by the accumulator
+    out0 = jnp.zeros((out_rows, rank), jnp.result_type(vals, factors[0]))
 
     def body(out, xs):
         h, l, v, b = xs
@@ -98,11 +100,17 @@ class LaunchCache:
         """Pad + stack + upload every launch of ``blco`` (host work, once)."""
         from .streaming import prepare_chunks
         max_launch = max((l.nnz for l in blco.launches), default=1)
-        res = int(reservation_nnz) if reservation_nnz else \
-            pad_multiple(max_launch)
-        if res < max_launch:
-            raise ValueError(f"reservation {res} smaller than largest "
-                             f"launch ({max_launch} nnz)")
+        if reservation_nnz:
+            if int(reservation_nnz) < max_launch:
+                raise ValueError(
+                    f"reservation {int(reservation_nnz)} smaller than "
+                    f"largest launch ({max_launch} nnz)")
+            # the byte predictor (launch_cache_bytes) and the fused Pallas
+            # tiler both assume LANE-multiple reservations; a ragged explicit
+            # reservation is rounded up, never honoured as-is
+            res = pad_multiple(int(reservation_nnz))
+        else:
+            res = pad_multiple(max_launch)
         chunks = prepare_chunks(blco, res)
         return cls.from_chunks(chunks, blco, reservation_nnz=res)
 
@@ -166,7 +174,8 @@ class LaunchCache:
         factors = tuple(jnp.asarray(f) for f in factors)
         if self.num_launches == 0:
             rank = factors[0].shape[1]
-            return jnp.zeros((self.dims[mode], rank), factors[0].dtype)
+            return jnp.zeros((self.dims[mode], rank),
+                             jnp.result_type(self.vals, factors[0]))
         record_dispatch()
         return stacked_mttkrp(
             self.hi, self.lo, self.vals, self.bases, factors,

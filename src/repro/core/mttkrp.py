@@ -98,7 +98,9 @@ def launch_mttkrp_impl(idx_hi, idx_lo, vals, bases, factors, *,
     coords = delinearize(re_fields, re_shifts, idx_hi, idx_lo)
     coords = [c + bases[:, n] for n, c in enumerate(coords)]
 
-    partial = vals[:, None].astype(factors[0].dtype)
+    # promote, never downcast: float64 values against float32 factors
+    # accumulate in float64 (jnp.result_type), on every kernel path
+    partial = vals[:, None].astype(jnp.result_type(vals, factors[0]))
     for m, f in enumerate(factors):
         if m == mode:
             continue
@@ -204,7 +206,8 @@ def mttkrp_per_launch(blco: BLCOTensor, factors, mode: int, *,
         resolution = choose_resolution(blco.dims[mode])
     factors = tuple(jnp.asarray(f) for f in factors)
     rank = factors[0].shape[1]
-    out = jnp.zeros((blco.dims[mode], rank), factors[0].dtype)
+    out = jnp.zeros((blco.dims[mode], rank),
+                    jnp.result_type(jnp.asarray(blco.values[:0]), factors[0]))
 
     bases_all = blco.block_upper_bases()           # (num_blocks, N)
     block_ids = blco.element_block_ids()           # (nnz,)

@@ -67,7 +67,8 @@ def _partial_and_target(hi_ref, lo_ref, vals_ref, bases_ref, f_refs, *,
     vals = vals_ref[...]
     coords = _delinearize_tile(hi, lo, bases_ref[...], field_bits,
                                field_shifts)
-    partial = vals[:, None].astype(f_refs[0].dtype)
+    # promote, never downcast (dtype parity with the XLA scan path)
+    partial = vals[:, None].astype(jnp.result_type(vals, f_refs[0]))
     j = 0
     for m in range(len(field_bits)):
         if m == mode:
@@ -135,6 +136,7 @@ def _fused_flat(hi, lo, vals, bases, factors, *, field_bits: tuple,
     n_modes = len(field_bits)
     others = tuple(factors[m] for m in range(n_modes) if m != mode)
     r = others[0].shape[1]
+    out_dtype = jnp.result_type(vals, others[0])
     grid = (t // tile,)
     vec = pl.BlockSpec((tile,), lambda i: (i,))
     basespec = pl.BlockSpec((tile, n_modes), lambda i: (i, 0))
@@ -149,7 +151,7 @@ def _fused_flat(hi, lo, vals, bases, factors, *, field_bits: tuple,
             grid=grid,
             in_specs=[vec, vec, vec, basespec] + fspecs,
             out_specs=pl.BlockSpec((out_rows, r), lambda i: (0, 0)),
-            out_shape=jax.ShapeDtypeStruct((out_rows, r), others[0].dtype),
+            out_shape=jax.ShapeDtypeStruct((out_rows, r), out_dtype),
             interpret=interpret,
         )(hi, lo, vals, bases, *others)
 
@@ -160,7 +162,7 @@ def _fused_flat(hi, lo, vals, bases, factors, *, field_bits: tuple,
         in_specs=[vec, vec, vec, basespec] + fspecs,
         out_specs=(vec, pl.BlockSpec((tile, r), lambda i: (i, 0))),
         out_shape=(jax.ShapeDtypeStruct((t,), jnp.int32),
-                   jax.ShapeDtypeStruct((t, r), others[0].dtype)),
+                   jax.ShapeDtypeStruct((t, r), out_dtype)),
         interpret=interpret,
     )(hi, lo, vals, bases, *others)
     # ONE update per discovered segment (paper's atomic reduction), fused by
@@ -217,7 +219,8 @@ def fused_cache_mttkrp(cache, factors, mode: int, *,
     factors = tuple(jnp.asarray(f) for f in factors)
     if cache.num_launches == 0:
         rank = factors[0].shape[1]
-        return jnp.zeros((cache.dims[mode], rank), factors[0].dtype)
+        return jnp.zeros((cache.dims[mode], rank),
+                         jnp.result_type(cache.vals, factors[0]))
     hi, lo, vals, bases = cache.flat()
     return fused_mttkrp_flat(hi, lo, vals, bases, factors,
                              field_bits=cache.re_fields,

@@ -8,23 +8,32 @@ pooled reservations for large ones.
 
     registry   BLCO construction cache keyed by content fingerprint
     executor   ServiceEngine: pooled plans (reservations + device residency)
-    scheduler  FIFO admission by plan.device_bytes() + round-robin iterations
+    scheduler  FIFO admission by plan.device_bytes() + weighted stride
+               fair share with cancellation
     api        typed requests/responses + the DecompositionService facade
     metrics    per-job and service-wide counters (unified EngineStats)
+    runtime    ServiceRuntime: threaded async driver with job cancellation
+               and streaming per-iteration status feeds
 """
-from .api import (DecompositionResult, DecompositionService, JobStatus,
-                  MTTKRPQuery, SubmitDecomposition, DEFAULT_DEVICE_BUDGET)
+from .api import (CancelJob, CancelResult, DecompositionResult,
+                  DecompositionService, JobStatus, MTTKRPQuery, SetWeight,
+                  SubmitDecomposition, WeightUpdate, DEFAULT_DEVICE_BUDGET)
 from .executor import (PooledExecutor, PooledInMemoryPlan, PooledStreamedPlan,
                        ServiceEngine)
 from .metrics import JobMetrics, ServiceMetrics
 from .registry import BuildParams, TensorHandle, TensorRegistry, fingerprint
-from .scheduler import Job, JobScheduler, QUEUED, RUNNING, DONE, FAILED
+from .runtime import JobEvent, ServiceRuntime, StatusFeed
+from .scheduler import (Job, JobScheduler, QUEUED, RUNNING, DONE, FAILED,
+                        CANCELLED, TERMINAL_STATES)
 
 __all__ = [
-    "DecompositionResult", "DecompositionService", "JobStatus",
-    "MTTKRPQuery", "SubmitDecomposition", "DEFAULT_DEVICE_BUDGET",
+    "CancelJob", "CancelResult", "DecompositionResult",
+    "DecompositionService", "JobStatus", "MTTKRPQuery", "SetWeight",
+    "SubmitDecomposition", "WeightUpdate", "DEFAULT_DEVICE_BUDGET",
     "ServiceEngine", "PooledExecutor", "PooledInMemoryPlan",
     "PooledStreamedPlan", "JobMetrics", "ServiceMetrics",
     "BuildParams", "TensorHandle", "TensorRegistry", "fingerprint",
+    "JobEvent", "ServiceRuntime", "StatusFeed",
     "Job", "JobScheduler", "QUEUED", "RUNNING", "DONE", "FAILED",
+    "CANCELLED", "TERMINAL_STATES",
 ]

@@ -26,14 +26,53 @@ DEFAULT_DEVICE_BUDGET = 256 << 20           # 256 MiB of admitted plan bytes
 
 @dataclasses.dataclass
 class SubmitDecomposition:
-    """Request: decompose ``tensor`` at rank R (CP-ALS until converged/iters)."""
+    """Request: decompose ``tensor`` at rank R (CP-ALS until converged/iters).
+
+    ``tenant`` labels the job for per-tenant share accounting; ``weight``
+    is its fair-share weight (a weight-2 tenant receives twice the ALS
+    sweeps of a weight-1 tenant while both are active).
+    """
     tensor: SparseTensor
     rank: int
     iters: int = 25
     tol: float = 1e-5
     seed: int = 0
+    tenant: str = "default"
+    weight: float = 1.0
     build: BuildParams = dataclasses.field(default_factory=BuildParams)
     reservation_nnz: int | None = None
+
+
+@dataclasses.dataclass
+class CancelJob:
+    """Request: cancel a queued or running job (idempotent on final jobs)."""
+    job_id: int
+
+
+@dataclasses.dataclass
+class CancelResult:
+    """Response: what cancelling freed.  ``freed_bytes`` is the measured
+    budget release (pooled share + per-job working set); 0 when the job was
+    still queued or already final."""
+    job_id: int
+    cancelled: bool
+    state: str
+    freed_bytes: int
+
+
+@dataclasses.dataclass
+class SetWeight:
+    """Request: re-weight one job, or every non-final job of a tenant."""
+    weight: float
+    job_id: int | None = None
+    tenant: str | None = None
+
+
+@dataclasses.dataclass
+class WeightUpdate:
+    """Response: which jobs now carry the new weight."""
+    weight: float
+    job_ids: tuple
 
 
 @dataclasses.dataclass
@@ -50,7 +89,7 @@ class MTTKRPQuery:
 class JobStatus:
     """Response: where one job is in its lifecycle."""
     job_id: int
-    state: str                   # queued | running | done | failed
+    state: str            # queued | running | done | failed | cancelled
     tensor_key: str
     iteration: int
     fit: float | None
@@ -58,6 +97,8 @@ class JobStatus:
     queue_wait_s: float
     cache_hit: bool
     backend: str = ""            # engine regime ("in_memory" | "streamed" | "")
+    tenant: str = "default"
+    weight: float = 1.0
     error: str | None = None
 
 
@@ -97,10 +138,49 @@ class DecompositionService:
         self._sync_cache_counters()
         job_id = self.scheduler.submit(handle, rank=req.rank,
                                        iters=req.iters, tol=req.tol,
-                                       seed=req.seed)
+                                       seed=req.seed, weight=req.weight,
+                                       tenant=req.tenant)
         self.scheduler.jobs[job_id].metrics.cache_hit = \
             self.registry.hits > hits_before
         return job_id
+
+    def cancel(self, req: CancelJob | int) -> CancelResult:
+        """Cancel a queued/running job; release its plan bytes immediately.
+
+        Idempotent: cancelling a done/failed/cancelled job reports
+        ``cancelled=False`` instead of raising.  Freed bytes re-run
+        admission, so a waiting job can be admitted in the same call.
+        """
+        job_id = req.job_id if isinstance(req, CancelJob) else int(req)
+        job = self._get_job(job_id)
+        cancelled = self.scheduler.cancel(job_id)
+        return CancelResult(job_id=job_id, cancelled=cancelled,
+                            state=job.state,
+                            freed_bytes=job.metrics.released_bytes
+                            if cancelled else 0)
+
+    def set_weight(self, req: SetWeight) -> WeightUpdate:
+        """Apply a fair-share weight to one job or a whole tenant.
+
+        Takes effect at the next scheduling quantum (between ALS sweeps):
+        a demoted tenant keeps its resumable ``CPState``, it is simply
+        picked less often from now on.
+        """
+        if (req.job_id is None) == (req.tenant is None):
+            raise ValueError("SetWeight targets exactly one of job_id or "
+                             "tenant")
+        if req.job_id is not None:
+            ids = [self._get_job(req.job_id).job_id]
+        else:
+            # a tenant whose jobs all finished between the caller's decision
+            # and this call is a no-op, not an error: under the async
+            # runtime the caller cannot win that race from outside the lock
+            ids = [j.job_id for j in self.scheduler.jobs.values()
+                   if j.tenant == req.tenant
+                   and j.state not in sched.TERMINAL_STATES]
+        for job_id in ids:
+            self.scheduler.set_weight(job_id, req.weight)
+        return WeightUpdate(weight=float(req.weight), job_ids=tuple(ids))
 
     def mttkrp(self, query: MTTKRPQuery):
         """One-shot MTTKRP (registers/caches the tensor first).
@@ -119,6 +199,7 @@ class DecompositionService:
         remaining = self.scheduler.device_budget_bytes \
             - self.metrics.admitted_reservation_bytes
         plan = self.engine.try_plan(handle, rank=rank,
+                                    dtype=query.factors[0].dtype,
                                     budget_remaining=remaining)
         if plan is None:
             raise ValueError(
@@ -134,7 +215,7 @@ class DecompositionService:
 
     # --------------------------------------------------------------- driving
     def step(self) -> bool:
-        """One fair-share scheduling cycle; True while work remains."""
+        """One weighted fair-share quantum; True while work remains."""
         return self.scheduler.step()
 
     def run(self) -> dict[int, DecompositionResult]:
@@ -163,7 +244,8 @@ class DecompositionService:
             converged=bool(job.cp is not None and job.cp.converged),
             queue_wait_s=job.metrics.queue_wait_s,
             cache_hit=job.metrics.cache_hit,
-            backend=job.metrics.backend, error=job.error)
+            backend=job.metrics.backend, tenant=job.tenant,
+            weight=job.weight, error=job.error)
 
     def result(self, job_id: int) -> DecompositionResult:
         job = self._get_job(job_id)

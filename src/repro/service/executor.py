@@ -15,10 +15,13 @@ pools back the plans it hands out:
 
 Each admitted job gets its *own* plan object (own ``EngineStats``) over the
 shared pooled state; ``plan.device_bytes()`` reports the bytes that plan
-newly holds against the budget (0 when it joined an existing pool entry),
-and ``plan.close()`` returns the bytes freed (the full entry, when the last
-sharer leaves) — so summing charges and frees over any admission order
-nets to zero.
+newly holds against the budget: its private rank-R factor working set
+(charged per job on EVERY branch — it is never pooled) plus the pooled
+tensor state (charged once, when the plan created the pool entry).
+``plan.close()`` returns the bytes freed (working set + the full pooled
+entry when the last sharer leaves) — so summing charges and frees over any
+admission order nets to zero.  Plans pin their ``TensorHandle`` for their
+lifetime, which blocks registry eviction of in-use tensors.
 """
 from __future__ import annotations
 
@@ -53,46 +56,54 @@ class PooledStreamedPlan(StreamedPlan):
     """A per-job streamed plan over a pooled reservation shape."""
 
     def __init__(self, engine: "ServiceEngine", handle: TensorHandle,
-                 held_bytes: int):
+                 held_bytes: int, working_bytes: int = 0):
         super().__init__(handle.blco, queues=engine.queues, spec=handle.spec,
                          chunks=handle.chunks, kernel=engine.kernel)
         self._engine = engine
+        self._handle = handle
         self._held = held_bytes
+        self._working = working_bytes       # per-job factor set, never pooled
 
     def device_bytes(self) -> int:
-        """Bytes this plan newly holds against the budget (0 when the
+        """Bytes this plan newly holds against the budget: its per-job
+        factor working set plus the pooled reservation (0 when the
         reservation shape was already pooled by another tenant)."""
-        return 0 if self._closed else self._held
+        return 0 if self._closed else self._held + self._working
 
     def close(self) -> int:
         if self._closed:
             return 0
         self._closed = True
         self._chunks = None                 # handle keeps its own reference
-        return self._engine._release_stream(self.spec)
+        self._handle.unpin()
+        return self._engine._release_stream(self.spec) + self._working
 
 
 class PooledInMemoryPlan(InMemoryPlan):
     """A per-job device-resident plan over a pooled DeviceBLCO copy."""
 
     def __init__(self, engine: "ServiceEngine", handle: TensorHandle,
-                 entry: ResidentEntry, held_bytes: int):
+                 entry: ResidentEntry, held_bytes: int,
+                 working_bytes: int = 0):
         super().__init__(handle.blco, device=entry.device, owns_device=False,
                          kernel=engine.kernel)
         self._engine = engine
+        self._handle = handle
         self._entry = entry
         self._held = held_bytes
+        self._working = working_bytes       # per-job factor set, never pooled
         if held_bytes:                      # this plan paid for the upload
             self._stats.h2d_bytes += held_bytes
 
     def device_bytes(self) -> int:
-        return 0 if self._dev is None else self._held
+        return 0 if self._dev is None else self._held + self._working
 
     def close(self) -> int:
         if self._dev is None:
             return 0
         self._dev = None
-        return self._engine._release_resident(self._entry.key)
+        self._handle.unpin()
+        return self._engine._release_resident(self._entry.key) + self._working
 
 
 class ServiceEngine:
@@ -132,22 +143,27 @@ class ServiceEngine:
                  dtype=jnp.float32, budget_remaining: int):
         """The pooled regime decision: an ExecutionPlan, or None to wait.
 
-        Device-resident when another tenant already holds this tensor
-        resident (joining an existing copy is free and strictly better than
-        streaming), or when the tensor's true footprint plus the rank-R
-        factor working set fits what is left of the budget; streamed when
-        at least the (pooled) reservation fits; None when neither does.
+        Every branch charges the per-job rank-R factor working set: it is
+        private to the job (factors + accumulator live on device for the
+        job's whole run) and is NEVER pooled, so joining an existing
+        resident copy or a pooled reservation still costs ``working`` bytes.
+        Device-resident when the pooled residency cost plus the working set
+        fits what is left of the budget (joining an existing copy makes the
+        pooled part free and strictly better than streaming); streamed when
+        the (pooled) reservation plus the working set fits; None when
+        neither does.
         """
         working = factor_bytes(handle.dims, rank, dtype)
         rc = self.resident_cost(handle)
-        if rc == 0 or rc + working <= budget_remaining:
-            return self._plan_resident(handle)
+        if rc + working <= budget_remaining:
+            return self._plan_resident(handle, working)
         sc = self.streamed_cost(handle)
         if sc + working <= budget_remaining:
-            return self._plan_streamed(handle)
+            return self._plan_streamed(handle, working)
         return None
 
-    def _plan_resident(self, handle: TensorHandle) -> PooledInMemoryPlan:
+    def _plan_resident(self, handle: TensorHandle,
+                       working: int = 0) -> PooledInMemoryPlan:
         entry = self._resident_pool.get(handle.key)
         held = 0
         if entry is None:
@@ -157,16 +173,19 @@ class ServiceEngine:
             self._resident_pool[handle.key] = entry
             held = entry.bytes
         entry.refcount += 1
-        return PooledInMemoryPlan(self, handle, entry, held)
+        handle.pin()
+        return PooledInMemoryPlan(self, handle, entry, held, working)
 
-    def _plan_streamed(self, handle: TensorHandle) -> PooledStreamedPlan:
+    def _plan_streamed(self, handle: TensorHandle,
+                       working: int = 0) -> PooledStreamedPlan:
         entry = self._stream_pool.get(handle.spec)
         held = 0
         if entry is None:
             entry = self._stream_pool[handle.spec] = PoolEntry(spec=handle.spec)
             held = handle.spec.bytes_in_flight(self.queues)
         entry.refcount += 1
-        return PooledStreamedPlan(self, handle, held)
+        handle.pin()
+        return PooledStreamedPlan(self, handle, held, working)
 
     # ------------------------------------------------------------- releases
     def _release_stream(self, spec: ReservationSpec) -> int:

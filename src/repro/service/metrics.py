@@ -21,11 +21,20 @@ class JobMetrics:
     iterations: int = 0
     cache_hit: bool = False
     backend: str = ""                    # which regime the engine chose
+    released_bytes: int = 0              # budget bytes freed at retirement
     stats: EngineStats = dataclasses.field(default_factory=EngineStats)
 
     @property
     def queue_wait_s(self) -> float:
-        end = self.admitted_s if self.admitted_s is not None else time.perf_counter()
+        """Time from submission until admission — or until the job left the
+        queue for a terminal state without ever being admitted (cancelled
+        while queued), so the value freezes at retirement."""
+        if self.admitted_s is not None:
+            end = self.admitted_s
+        elif self.completed_s is not None:
+            end = self.completed_s
+        else:
+            end = time.perf_counter()
         return end - self.submitted_s
 
     @property
@@ -41,6 +50,7 @@ class JobMetrics:
             "run_time_s": self.run_time_s,
             "cache_hit": self.cache_hit,
             "backend": self.backend,
+            "released_bytes": self.released_bytes,
             "h2d_bytes": self.stats.h2d_bytes,
             "mttkrp_calls": self.stats.mttkrp_calls,
             "launches": self.stats.launches,
@@ -57,11 +67,17 @@ class ServiceMetrics:
     jobs_admitted: int = 0
     jobs_completed: int = 0
     jobs_failed: int = 0
+    jobs_cancelled: int = 0
+    preemptions: int = 0                 # weight demotions of running jobs
+    cancel_freed_bytes_total: int = 0    # budget bytes freed by cancel()
     blco_cache_hits: int = 0
     blco_cache_misses: int = 0
     iterations_total: int = 0
     h2d_bytes_total: int = 0
     launches_total: int = 0
+    # executed ALS sweeps per tenant: the observable the weighted fair
+    # share is measured by (share_i ~ weight_i / sum(weights))
+    tenant_iterations: dict = dataclasses.field(default_factory=dict)
     # measured plan bytes currently held vs the budget (the name predates
     # the engine API, when only reservations were charged; kept for compat)
     admitted_reservation_bytes: int = 0
@@ -73,6 +89,17 @@ class ServiceMetrics:
             self.peak_admitted_reservation_bytes,
             self.admitted_reservation_bytes)
 
+    def record_iteration(self, tenant: str) -> None:
+        self.tenant_iterations[tenant] = \
+            self.tenant_iterations.get(tenant, 0) + 1
+
+    def tenant_shares(self) -> dict:
+        """Fraction of all executed iterations each tenant received."""
+        total = sum(self.tenant_iterations.values())
+        if not total:
+            return {}
+        return {t: n / total for t, n in self.tenant_iterations.items()}
+
     def iterations_per_sec(self) -> float:
         dt = time.perf_counter() - self.started_s
         return self.iterations_total / dt if dt > 0 else 0.0
@@ -83,12 +110,17 @@ class ServiceMetrics:
             "jobs_admitted": self.jobs_admitted,
             "jobs_completed": self.jobs_completed,
             "jobs_failed": self.jobs_failed,
+            "jobs_cancelled": self.jobs_cancelled,
+            "preemptions": self.preemptions,
+            "cancel_freed_bytes_total": self.cancel_freed_bytes_total,
             "blco_cache_hits": self.blco_cache_hits,
             "blco_cache_misses": self.blco_cache_misses,
             "iterations_total": self.iterations_total,
             "iterations_per_sec": self.iterations_per_sec(),
             "h2d_bytes_total": self.h2d_bytes_total,
             "launches_total": self.launches_total,
+            "tenant_iterations": dict(self.tenant_iterations),
+            "tenant_shares": self.tenant_shares(),
             "admitted_reservation_bytes": self.admitted_reservation_bytes,
             "peak_admitted_reservation_bytes":
                 self.peak_admitted_reservation_bytes,

@@ -53,6 +53,16 @@ class TensorHandle:
     blco: BLCOTensor
     spec: ReservationSpec        # padded launch-buffer shape
     chunks: list                 # reservation-padded launch chunks (host)
+    pins: int = 0                # live plans referencing blco/chunks
+
+    def pin(self) -> None:
+        """A plan now references this handle's blco/chunks (blocks evict)."""
+        self.pins += 1
+
+    def unpin(self) -> None:
+        if self.pins <= 0:
+            raise RuntimeError(f"unbalanced unpin of tensor {self.key}")
+        self.pins -= 1
 
     @property
     def order(self) -> int:
@@ -103,7 +113,22 @@ class TensorRegistry:
         return self._cache.get(key)
 
     def evict(self, key: str) -> bool:
-        return self._cache.pop(key, None) is not None
+        """Drop a cached handle; refuses while any live plan references it.
+
+        Streaming plans hold the handle's ``chunks`` for their whole
+        lifetime, so evicting a pinned handle would corrupt running jobs —
+        the refcount turns that silent corruption into an error (and makes
+        an LRU policy over ``host_bytes()`` safe to build on top).
+        """
+        handle = self._cache.get(key)
+        if handle is None:
+            return False
+        if handle.pins > 0:
+            raise RuntimeError(
+                f"tensor {key} is pinned by {handle.pins} live plan(s); "
+                f"close them before evicting")
+        del self._cache[key]
+        return True
 
     def __len__(self) -> int:
         return len(self._cache)

@@ -1,21 +1,36 @@
-"""Job scheduler: admission by measured plan bytes + round-robin fair share.
+"""Job scheduler: admission by measured plan bytes + weighted fair share.
 
 Admission control is the service restatement of the paper's §4.2 memory
 constraint, now in terms of the unified engine API: each admitted job holds
 an ``ExecutionPlan`` and is charged exactly ``plan.device_bytes()`` — the
-bytes the plan *measurably* holds resident (a shared pool entry is charged
-once, by whichever tenant created it) — instead of a padded worst-case
-reservation sum.  The engine picks the regime per job under the remaining
-budget: small tensors get the device-resident fast path, larger ones
-stream through pooled reservations, and jobs that fit neither wait in a
-FIFO queue.  Completions close their plans (releasing pool references) and
-re-run admission.
+bytes the plan *measurably* holds resident: its per-job factor working set
+plus the pooled tensor state (a shared pool entry is charged once, by
+whichever tenant created it) — instead of a padded worst-case reservation
+sum.  The engine picks the regime per job under the remaining budget: small
+tensors get the device-resident fast path, larger ones stream through
+pooled reservations, and jobs that fit neither wait in a FIFO queue.
+Completions (and cancellations) close their plans — releasing pool
+references and the working set — and re-run admission.
 
-Fair share is round-robin at CP-ALS *iteration* granularity: each
-scheduling cycle gives every active job exactly one full ALS sweep
-(``cp_als_step``), so a 4-tenant service advances all tenants at 1/4 the
-solo rate instead of serializing whole decompositions — the load-balance
-behaviour heterogeneous MTTKRP workloads need (Nisa et al.).
+Fair share is **stride scheduling** at CP-ALS *iteration* granularity
+(Waldspurger's deterministic lottery): every job carries a per-tenant
+``weight``; each scheduling quantum runs ONE full ALS sweep
+(``cp_als_step``) of the active job with the lowest virtual time
+(``pass_value``), then advances that job's pass by ``STRIDE1 / weight``.
+Over any window, iterations divide in proportion to the weights — the
+load-balance behaviour heterogeneous MTTKRP workloads need (Nisa et al.),
+generalising the old equal round-robin (all weights 1 reproduce it
+exactly, including the admission-order tie-break).  Because the quantum is
+a whole sweep, preemption is natural: ``set_weight`` takes effect at the
+next quantum and a demoted tenant keeps its ``CPState`` intact.
+
+``cancel`` retires a queued or running job immediately: the plan is
+closed, its pooled bytes and working set are released, and admission
+re-runs so a waiting job can take the freed budget.
+
+Observers (``observers``: callables ``(job, kind)``) are notified on every
+lifecycle edge and every completed iteration — the hook the async runtime
+uses to stream per-iteration status without polling.
 """
 from __future__ import annotations
 
@@ -33,6 +48,13 @@ QUEUED = "queued"
 RUNNING = "running"
 DONE = "done"
 FAILED = "failed"
+CANCELLED = "cancelled"
+
+TERMINAL_STATES = (DONE, FAILED, CANCELLED)
+
+# Stride-scheduling precision constant (pass advances in STRIDE1/weight
+# steps); large so integer-ish weights stay exact in float arithmetic.
+STRIDE1 = float(1 << 20)
 
 
 @dataclasses.dataclass
@@ -43,12 +65,20 @@ class Job:
     iters: int
     tol: float
     seed: int
+    tenant: str = "default"
+    weight: float = 1.0
+    pass_value: float = 0.0               # stride-scheduling virtual time
     state: str = QUEUED
     cp: CPState | None = None
     metrics: JobMetrics = dataclasses.field(default_factory=JobMetrics)
     error: str | None = None
     plan: object | None = None            # ExecutionPlan once admitted
     mttkrp_fn: Callable | None = None     # test/override hook; default = plan
+
+    @property
+    def stride(self) -> float:
+        """Virtual-time advance per executed sweep (inverse weight)."""
+        return STRIDE1 / self.weight
 
     @property
     def fit(self) -> float | None:
@@ -58,7 +88,7 @@ class Job:
 
 
 class JobScheduler:
-    """FIFO admission by measured plan bytes; round-robin stepping."""
+    """FIFO admission by measured plan bytes; weighted stride stepping."""
 
     def __init__(self, engine: ServiceEngine, *,
                  device_budget_bytes: int,
@@ -69,14 +99,24 @@ class JobScheduler:
         self.max_active = max_active
         self.metrics = metrics if metrics is not None else ServiceMetrics()
         self._next_id = 0
+        self._global_pass = 0.0           # virtual time of the last quantum
         self.jobs: dict[int, Job] = {}
         self.pending: list[int] = []          # FIFO admission queue
-        self.active: list[int] = []           # admission order = RR order
+        self.active: list[int] = []           # admission order
         self.trace: list[int] = []            # job id per executed iteration
+        self.observers: list[Callable[[Job, str], None]] = []
+
+    # -------------------------------------------------------------- events
+    def _publish(self, job: Job, kind: str) -> None:
+        for fn in list(self.observers):
+            fn(job, kind)
 
     # ------------------------------------------------------------ lifecycle
     def submit(self, handle: TensorHandle, *, rank: int, iters: int = 25,
-               tol: float = 1e-5, seed: int = 0) -> int:
+               tol: float = 1e-5, seed: int = 0, weight: float = 1.0,
+               tenant: str = "default") -> int:
+        if not weight > 0:
+            raise ValueError(f"tenant weight must be > 0, got {weight!r}")
         need = self.engine.min_cost(handle, rank)
         if need > self.device_budget_bytes:
             raise ValueError(
@@ -84,11 +124,13 @@ class JobScheduler:
                 f"cheapest regime, which exceeds the device budget "
                 f"({self.device_budget_bytes} B): it can never be admitted")
         job = Job(job_id=self._next_id, handle=handle, rank=rank,
-                  iters=iters, tol=tol, seed=seed)
+                  iters=iters, tol=tol, seed=seed, weight=float(weight),
+                  tenant=tenant)
         self._next_id += 1
         self.jobs[job.job_id] = job
         self.pending.append(job.job_id)
         self.metrics.jobs_submitted += 1
+        self._publish(job, QUEUED)
         self._admit()
         return job.job_id
 
@@ -109,6 +151,9 @@ class JobScheduler:
             self.metrics.hold_bytes(plan.device_bytes())
             job.plan = plan
             job.state = RUNNING
+            # a newly admitted job enters one quantum past the current
+            # virtual time: it cannot starve tenants already in flight
+            job.pass_value = self._global_pass + job.stride
             job.metrics.admitted_s = time.perf_counter()
             job.metrics.backend = plan.backend
             job.metrics.stats = plan.stats()
@@ -117,6 +162,7 @@ class JobScheduler:
                                  seed=job.seed)
             self.active.append(job.job_id)
             self.metrics.jobs_admitted += 1
+            self._publish(job, "admitted")
 
     def _retire(self, job: Job, state: str, error: str | None = None) -> None:
         job.state = state
@@ -124,37 +170,109 @@ class JobScheduler:
         job.metrics.completed_s = time.perf_counter()
         self.active.remove(job.job_id)
         freed = job.plan.close() if job.plan is not None else 0
+        job.metrics.released_bytes = freed
         self.metrics.hold_bytes(-freed)
         if state == FAILED:
             self.metrics.jobs_failed += 1
+        elif state == CANCELLED:
+            self.metrics.jobs_cancelled += 1
+            self.metrics.cancel_freed_bytes_total += freed
         else:
             self.metrics.jobs_completed += 1
         self.metrics.h2d_bytes_total += job.metrics.stats.h2d_bytes
         self.metrics.launches_total += job.metrics.stats.launches
+        self._publish(job, state)
         self._admit()
 
-    # ------------------------------------------------------------- stepping
-    def step(self) -> bool:
-        """One scheduling cycle: one ALS sweep per active job, round-robin.
+    # ------------------------------------------------------------- control
+    def cancel(self, job_id: int) -> bool:
+        """Cancel a queued or running job; returns False if already final.
 
-        Returns True while any job is active or queued.
+        A running job's plan is closed (pooled bytes + working set
+        released) and admission re-runs immediately, so a waiting job can
+        be admitted in the same call.  The job's ``CPState`` (partial
+        factors, fit trajectory) survives for inspection.
         """
-        for job_id in list(self.active):
-            job = self.jobs[job_id]
+        job = self._get(job_id)
+        if job.state == QUEUED:
+            self.pending.remove(job.job_id)
+            job.state = CANCELLED
+            job.error = None
+            job.metrics.completed_s = time.perf_counter()
+            self.metrics.jobs_cancelled += 1
+            self._publish(job, CANCELLED)
+            self._admit()                 # unblock jobs queued behind it
+            return True
+        if job.state == RUNNING:
+            self._retire(job, CANCELLED)
+            return True
+        return False
+
+    def set_weight(self, job_id: int, weight: float) -> Job:
+        """Re-weight a tenant's job; effective at the next scheduling quantum.
+
+        Preemption between ALS sweeps: the quantum is a whole sweep, so a
+        demotion never interrupts (or loses) the job's ``CPState`` — the
+        job simply gets scheduled less often from the next pick on.
+        """
+        if not weight > 0:
+            raise ValueError(f"tenant weight must be > 0, got {weight!r}")
+        job = self._get(job_id)
+        if job.state in TERMINAL_STATES:
+            raise ValueError(f"job {job_id} is {job.state}; weight is final")
+        demoted = weight < job.weight
+        job.weight = float(weight)
+        if job.state == RUNNING and demoted:
+            self.metrics.preemptions += 1
+        self._publish(job, "weight")
+        return job
+
+    def _get(self, job_id: int) -> Job:
+        job = self.jobs.get(job_id)
+        if job is None:
+            raise ValueError(f"unknown job id {job_id!r}")
+        return job
+
+    # ------------------------------------------------------------- stepping
+    def _pick(self) -> Job | None:
+        """Stride scheduling: the active job with the lowest virtual time.
+
+        Ties break by job id (= admission order), which makes equal
+        weights reproduce the old round-robin trace exactly.
+        """
+        if not self.active:
+            return None
+        job = min((self.jobs[j] for j in self.active),
+                  key=lambda j: (j.pass_value, j.job_id))
+        self._global_pass = job.pass_value
+        return job
+
+    def step(self) -> bool:
+        """One scheduling quantum: one ALS sweep of the min-pass job.
+
+        Returns True while any job is active or queued.  Weighted fair
+        share emerges across quanta: a weight-2 tenant's pass advances half
+        as fast, so it is picked twice as often as a weight-1 tenant.
+        """
+        job = self._pick()
+        if job is not None:
+            job.pass_value += job.stride
             backend = job.mttkrp_fn if job.mttkrp_fn is not None else job.plan
             try:
                 cp_als_step(backend, job.cp)
             except Exception as exc:          # noqa: BLE001 — job isolation:
                 self._retire(job, FAILED, error=repr(exc))
-                continue                      # one bad tensor must not take
-            self.trace.append(job_id)         # down the other tenants
-            job.metrics.iterations = job.cp.iteration
+                return bool(self.active or self.pending)
+            self.trace.append(job.job_id)     # one bad tensor must not take
+            job.metrics.iterations = job.cp.iteration  # down other tenants
             self.metrics.iterations_total += 1
+            self.metrics.record_iteration(job.tenant)
+            self._publish(job, "iteration")
             if job.cp.converged or job.cp.iteration >= job.iters:
                 self._retire(job, DONE)
         return bool(self.active or self.pending)
 
     def run(self) -> None:
-        """Synchronous driver: cycle until every submitted job retires."""
+        """Synchronous driver: step until every submitted job retires."""
         while self.step():
             pass

@@ -44,6 +44,41 @@ def test_bench_dispatch_json_schema(tmp_path, monkeypatch):
     assert any(name.startswith("bench3.") for name, _, _ in rows)
 
 
+def test_bench_multitenant_json_schema(tmp_path):
+    """The weighted multi-tenant bench emits per-tenant iterations/sec and
+    shares within 10% of the weights (the ISSUE 4 acceptance), plus the
+    measured bytes freed by a mid-run cancellation."""
+    path = tmp_path / "BENCH_4.json"
+    rows = []
+    payload = bench.bench_multitenant(rows, fast=True, json_path=str(path))
+    on_disk = json.loads(path.read_text())
+    assert on_disk == payload
+    assert payload["bench"] == "weighted_multi_tenant_service"
+    assert payload["max_share_deviation_vs_weights"] <= 0.1
+    assert payload["cancelled_jobs"] == 1
+    assert payload["cancel_freed_bytes"] > 0
+    tenants = payload["tenants"]
+    assert abs(sum(t["expected_share"] for t in tenants.values()) - 1) < 1e-9
+    for name, t in tenants.items():
+        assert t["iterations"] > 0 and t["iters_per_sec"] > 0, name
+        assert abs(t["share"] - t["expected_share"]) <= \
+            0.1 * t["expected_share"], name
+    heavy, light = tenants["heavy"], tenants["light-1"]
+    assert heavy["weight"] == 2 * light["weight"]
+    assert heavy["iterations"] == 2 * light["iterations"]
+    assert any(name.startswith("service4.") for name, _, _ in rows)
+
+
+def test_committed_bench4_weighted_shares():
+    """The committed multi-tenant trajectory must hold the 10% share bound
+    and show a real cancellation release."""
+    path = os.path.join(REPO, "BENCH_4.json")
+    assert os.path.exists(path), "BENCH_4.json must be committed"
+    payload = json.loads(open(path).read())
+    assert payload["max_share_deviation_vs_weights"] <= 0.1
+    assert payload["cancel_freed_bytes"] > 0
+
+
 def test_committed_bench3_shows_speedup():
     """The committed perf trajectory must show the fused/cached path beating
     the PR-2 per-launch loop (acceptance: >= 2x on this machine)."""

@@ -143,6 +143,56 @@ def test_cache_reservation_validation_and_flat_stream():
     cache.delete()
 
 
+def test_ragged_explicit_reservation_rounds_to_lane():
+    """ISSUE 4 satellite: an explicit non-LANE reservation_nnz is rounded
+    up, so the actual footprint matches the launch_cache_bytes predictor
+    and the fused Pallas tiler always sees a tile-divisible reservation."""
+    t = _tensor()
+    # a non-pow2 block budget gives launches whose max is NOT a LANE multiple
+    b = core.build_blco(t, target_bits=12, max_nnz_per_block=200)
+    max_launch = max(l.nnz for l in b.launches)
+    ragged = max_launch + 3                    # deliberately not a multiple
+    assert ragged % LANE != 0
+    cache = LaunchCache.from_blco(b, reservation_nnz=ragged)
+    assert cache.reservation == pad_multiple(ragged)
+    assert cache.reservation % LANE == 0
+    # the default reservation equals the predictor even for ragged nnz
+    default = LaunchCache.from_blco(b)
+    assert max_launch % LANE != 0              # the ragged regime is real
+    assert default.device_bytes() == launch_cache_bytes(b)
+    factors = _factors(t.dims)
+    oracle = core.mttkrp_dense_oracle(t, factors, 0)
+    assert _rel_err(cache.mttkrp(factors, 0), oracle) < 5e-4
+    cache.delete()
+    default.delete()
+
+
+def test_dtype_parity_xla_pallas_per_launch():
+    """ISSUE 4 satellite: float64 tensor values against float32 factors
+    accumulate in float64 on EVERY path (jnp.result_type), instead of the
+    stacked accumulator silently downcasting to the factor dtype."""
+    import jax
+    from repro.kernels.fused import fused_cache_mttkrp
+
+    t = _tensor()
+    with jax.experimental.enable_x64():
+        t64 = core.from_coo(np.asarray(t.indices),
+                            np.asarray(t.values, np.float64), t.dims)
+        b = core.build_blco(t64, target_bits=12, max_nnz_per_block=256)
+        cache = LaunchCache.from_blco(b)
+        factors = _factors(t.dims)             # float32 on purpose
+        assert cache.vals.dtype == np.float64
+        oracle = core.mttkrp_dense_oracle(t64, factors, 0)
+        stacked = cache.mttkrp(factors, 0)
+        loop = core.mttkrp_per_launch(b, factors, 0)
+        fused = fused_cache_mttkrp(cache, factors, 0)
+        for name, out in (("stacked", stacked), ("per_launch", loop),
+                          ("pallas", fused)):
+            assert out.dtype == np.float64, name
+            assert _rel_err(out, oracle) < 1e-10, name
+        cache.delete()
+
+
 def test_zero_nnz_cache():
     t = core.from_coo(np.zeros((0, 3), np.int64), np.zeros((0,), np.float32),
                       (8, 6, 4))

@@ -1,0 +1,342 @@
+"""Async service runtime: cancellation, streaming status, weighted shares.
+
+Acceptance scenarios (ISSUE 4):
+* a 3-tenant run with weights (2, 1, 1) yields an iteration trace within
+  10% of the 2:1:1 share (here: exactly 2:1:1 — stride scheduling is
+  deterministic);
+* ``cancel()`` frees measured pooled bytes mid-run (asserted via
+  ``ServiceEngine.pooled_bytes()``) and a waiting job is admitted
+  immediately, for a queued job, a running job, and the last sharer of a
+  pooled resident copy;
+* the runtime streams per-iteration ``JobEvent`` snapshots to both
+  blocking and asyncio subscribers while jobs run on the worker thread.
+"""
+import asyncio
+import time
+
+import numpy as np
+import pytest
+
+from repro import core
+from repro.service import (BuildParams, CancelJob, DecompositionService,
+                           ServiceRuntime, SetWeight, SubmitDecomposition,
+                           TensorRegistry)
+from repro.engine import factor_bytes
+
+BUILD = BuildParams(max_nnz_per_block=256)
+
+
+def _t1(seed=6):
+    return core.random_tensor((30, 22, 14), 1500, seed=seed, dist="powerlaw")
+
+
+def _req(t, *, seed=0, iters=4, tenant="default", weight=1.0, rank=4):
+    return SubmitDecomposition(tensor=t, rank=rank, iters=iters, seed=seed,
+                               tol=0.0, tenant=tenant, weight=weight,
+                               build=BUILD)
+
+
+# --------------------------------------------------------- weighted shares
+def test_weighted_fair_share_2_1_1():
+    """The ISSUE acceptance: weights (2, 1, 1) -> iteration shares within
+    10% of (1/2, 1/4, 1/4) over the window where all tenants are active."""
+    t = _t1()
+    svc = DecompositionService(device_budget_bytes=64 << 20, queues=2)
+    # tenant A gets twice the sweeps, so 2x the iterations finish together
+    a = svc.submit(_req(t, seed=0, iters=8, tenant="A", weight=2.0))
+    b = svc.submit(_req(t, seed=1, iters=4, tenant="B", weight=1.0))
+    c = svc.submit(_req(t, seed=2, iters=4, tenant="C", weight=1.0))
+    svc.run()
+    m = svc.service_metrics()
+    assert m["tenant_iterations"] == {"A": 8, "B": 4, "C": 4}
+    for tenant, expected in (("A", 0.5), ("B", 0.25), ("C", 0.25)):
+        assert abs(m["tenant_shares"][tenant] - expected) <= 0.1 * expected
+    # all tenants stay interleaved: every 4-quantum window is 2xA, 1xB, 1xC
+    trace = svc.scheduler.trace
+    assert len(trace) == 16
+    for w in range(4):
+        window = trace[4 * w:4 * w + 4]
+        assert window.count(a) == 2 and window.count(b) == 1 \
+            and window.count(c) == 1
+    assert all(svc.status(j).state == "done" for j in (a, b, c))
+
+
+def test_equal_weights_reproduce_round_robin():
+    svc = DecompositionService(device_budget_bytes=64 << 20, queues=2)
+    ids = [svc.submit(_req(_t1(), seed=s, iters=3)) for s in range(3)]
+    svc.run()
+    assert svc.scheduler.trace == ids * 3
+
+
+def test_set_weight_preempts_between_sweeps_keeping_state():
+    """Demoting a heavy tenant takes effect at the next quantum and never
+    resets its CPState (fits keep accumulating from where they were)."""
+    t = _t1()
+    svc = DecompositionService(device_budget_bytes=64 << 20, queues=2)
+    heavy = svc.submit(_req(t, seed=0, iters=50, tenant="heavy", weight=4.0))
+    light = svc.submit(_req(t, seed=1, iters=50, tenant="light", weight=1.0))
+    for _ in range(10):
+        svc.step()
+    head = svc.scheduler.trace[:10]
+    assert head.count(heavy) == 8 and head.count(light) == 2   # 4:1
+    fits_before = list(svc.scheduler.jobs[heavy].cp.fits)
+
+    svc.set_weight(SetWeight(weight=1.0, tenant="heavy"))       # demote
+    assert svc.service_metrics()["preemptions"] == 1
+    for _ in range(10):
+        svc.step()
+    tail = svc.scheduler.trace[10:20]
+    # equal weights from the demotion on: the 4:1 window becomes 1:1
+    assert tail.count(light) == tail.count(heavy) == 5
+    # CPState survived the demotion: the old trajectory is a prefix
+    fits_after = svc.scheduler.jobs[heavy].cp.fits
+    assert fits_after[:len(fits_before)] == fits_before
+    assert len(fits_after) > len(fits_before)
+
+    with pytest.raises(ValueError, match="must be > 0"):
+        svc.set_weight(SetWeight(weight=0.0, job_id=heavy))
+    with pytest.raises(ValueError, match="exactly one of"):
+        svc.set_weight(SetWeight(weight=2.0))
+    # a tenant whose jobs already finished is a no-op, not an error (the
+    # caller cannot win that race against the async runtime's worker)
+    svc.run()
+    update = svc.set_weight(SetWeight(weight=3.0, tenant="heavy"))
+    assert update.job_ids == ()
+
+
+def test_weight_validation_at_submit():
+    svc = DecompositionService(device_budget_bytes=64 << 20)
+    with pytest.raises(ValueError, match="weight must be > 0"):
+        svc.submit(_req(_t1(), weight=-1.0))
+
+
+# ------------------------------------------------------------ cancellation
+def test_cancel_queued_job():
+    """Cancelling a queued job unblocks FIFO admission behind it."""
+    t = _t1()
+    probe = TensorRegistry()
+    h = probe.register(t, build=BUILD)
+    fb = factor_bytes(h.dims, 4, np.float32)
+    budget = h.in_memory_bytes + fb               # exactly one job fits
+    svc = DecompositionService(device_budget_bytes=budget, queues=2)
+    j0 = svc.submit(_req(t, seed=0, iters=2))
+    j1 = svc.submit(_req(t, seed=1, iters=2))
+    j2 = svc.submit(_req(t, seed=2, iters=2))
+    assert [svc.status(j).state for j in (j0, j1, j2)] == \
+        ["running", "queued", "queued"]
+    res = svc.cancel(CancelJob(job_id=j1))
+    assert res.cancelled and res.state == "cancelled"
+    assert res.freed_bytes == 0                   # held nothing yet
+    assert svc.scheduler.pending == [j2]          # j2 moved up behind j0
+    # queue_wait of a never-admitted job freezes at cancellation
+    frozen = svc.status(j1).queue_wait_s
+    time.sleep(0.02)
+    assert svc.status(j1).queue_wait_s == frozen
+    svc.run()
+    assert svc.status(j1).state == "cancelled"
+    assert svc.status(j0).state == svc.status(j2).state == "done"
+    m = svc.service_metrics()
+    assert m["jobs_cancelled"] == 1 and m["jobs_completed"] == 2
+    assert not svc.cancel(j1).cancelled           # idempotent on final jobs
+
+
+def test_cancel_running_job_frees_bytes_and_admits_waiter():
+    """The ISSUE acceptance: cancel mid-run frees the measured pooled bytes
+    (ServiceEngine.pooled_bytes()) and the waiting job is admitted in the
+    same call."""
+    t = _t1()
+    probe = TensorRegistry()
+    h = probe.register(t, build=BUILD)
+    fb = factor_bytes(h.dims, 4, np.float32)
+    budget = h.in_memory_bytes + fb
+    svc = DecompositionService(device_budget_bytes=budget, queues=2)
+    j0 = svc.submit(_req(t, seed=0, iters=50))
+    j1 = svc.submit(_req(t, seed=1, iters=2))
+    for _ in range(3):                            # j0 makes real progress
+        svc.step()
+    assert svc.status(j0).state == "running"
+    assert svc.status(j1).state == "queued"
+    held = svc.engine.pooled_bytes()
+    assert held == h.in_memory_bytes
+    res = svc.cancel(j0)
+    assert res.cancelled and res.freed_bytes == h.in_memory_bytes + fb
+    # j0 was the only sharer: its pooled copy was measurably released,
+    # and the waiter was admitted immediately against the freed budget
+    assert svc.status(j1).state == "running"
+    assert svc.engine.pooled_bytes() == held      # j1 re-pooled the copy
+    assert svc.service_metrics()["admitted_reservation_bytes"] == budget
+    assert svc.service_metrics()["cancel_freed_bytes_total"] == \
+        res.freed_bytes
+    # the cancelled job keeps its partial CPState for inspection
+    assert svc.scheduler.jobs[j0].cp.iteration == 3
+    svc.run()
+    assert svc.status(j1).state == "done"
+    assert svc.engine.pooled_bytes() == 0
+    assert svc.service_metrics()["admitted_reservation_bytes"] == 0
+
+
+def test_cancel_last_sharer_releases_pooled_resident_copy():
+    t = _t1()
+    svc = DecompositionService(device_budget_bytes=64 << 20, queues=2)
+    j0 = svc.submit(_req(t, seed=0, iters=50))
+    j1 = svc.submit(_req(t, seed=1, iters=50))
+    assert svc.engine.resident_count == 1         # one shared copy
+    pooled = svc.engine.pooled_bytes()
+    fb = factor_bytes(t.dims, 4, np.float32)
+    svc.step()
+    # first sharer leaves: the copy stays for the second sharer
+    assert svc.cancel(j0).freed_bytes == fb       # only its working set
+    assert svc.engine.resident_count == 1
+    assert svc.engine.pooled_bytes() == pooled
+    # LAST sharer leaves: pooled bytes measurably return to zero
+    assert svc.cancel(j1).freed_bytes == pooled + fb
+    assert svc.engine.resident_count == 0
+    assert svc.engine.pooled_bytes() == 0
+    assert svc.service_metrics()["admitted_reservation_bytes"] == 0
+    assert svc.scheduler.jobs[j0].handle.pins == 0
+    assert not svc.step()                         # nothing left to run
+
+
+# ----------------------------------------------------------- async runtime
+def test_runtime_runs_jobs_and_matches_sync_service():
+    t = _t1()
+    sync = DecompositionService(device_budget_bytes=64 << 20, queues=2)
+    sj = sync.submit(_req(t, seed=3, iters=4))
+    ref = sync.run()[sj]
+
+    with ServiceRuntime(device_budget_bytes=64 << 20, queues=2) as rt:
+        j = rt.submit(_req(t, seed=3, iters=4))
+        status = rt.wait(j, timeout=120)
+        assert status.state == "done" and status.iteration == 4
+        got = rt.result(j)
+        assert rt.drain(timeout=10)
+    assert got.result.fits == ref.result.fits
+    for a, b in zip(got.result.factors, ref.result.factors):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_runtime_streaming_status_feed():
+    """Every sweep publishes a JobEvent carrying the fit trajectory."""
+    t = _t1()
+    with ServiceRuntime(device_budget_bytes=64 << 20, queues=2) as rt:
+        feed = rt.subscribe()                     # subscribe BEFORE submit
+        j = rt.submit(_req(t, seed=0, iters=4, tenant="streaming"))
+        events = []
+        for ev in feed:
+            if ev.job_id == j:
+                events.append(ev)
+            if ev.job_id == j and ev.terminal:
+                rt.unsubscribe(feed)
+        kinds = [ev.kind for ev in events]
+        assert kinds[0] == "queued" and kinds[1] == "admitted"
+        assert kinds.count("iteration") == 4 and kinds[-1] == "done"
+        iters = [ev for ev in events if ev.kind == "iteration"]
+        # fit trajectories grow one sweep at a time, monotonically complete
+        assert [len(ev.fits) for ev in iters] == [1, 2, 3, 4]
+        assert iters[-1].fits[:3] == iters[2].fits
+        assert all(ev.tenant == "streaming" for ev in events)
+        assert events[-1].metrics["iterations"] == 4
+        seqs = [ev.seq for ev in events]
+        assert seqs == sorted(seqs)
+
+
+def test_runtime_async_stream_and_result():
+    t = _t1()
+
+    async def drive(rt):
+        # prime the all-jobs stream so its feed subscribes BEFORE submit:
+        # every lifecycle event of the job is then observed, race-free
+        agen = rt.stream(None)
+        first = asyncio.ensure_future(anext(agen))
+        await asyncio.sleep(0)                    # generator reaches get()
+        j = rt.submit(_req(t, seed=1, iters=3, tenant="aio"))
+        kinds = []
+        ev = await first
+        while True:
+            if ev.job_id == j:
+                kinds.append(ev.kind)
+                if ev.terminal:
+                    break
+            ev = await anext(agen)
+        await agen.aclose()
+        result = await rt.result_async(j, timeout=120)
+        return kinds, result
+
+    with ServiceRuntime(device_budget_bytes=64 << 20, queues=2) as rt:
+        kinds, result = asyncio.run(drive(rt))
+    assert kinds[:2] == ["queued", "admitted"]
+    assert kinds.count("iteration") == 3 and kinds[-1] == "done"
+    assert result.metrics["iterations"] == 3
+
+
+def test_runtime_cancel_mid_run_frees_pooled_bytes():
+    t = _t1()
+    with ServiceRuntime(device_budget_bytes=64 << 20, queues=2) as rt:
+        j = rt.submit(_req(t, seed=0, iters=10_000, tenant="victim"))
+        feed = rt.subscribe(j)
+        assert feed.get(timeout=60).job_id == j   # it is really running
+        res = rt.cancel(CancelJob(job_id=j))
+        assert res.cancelled and res.freed_bytes > 0
+        assert rt.status(j).state == "cancelled"
+        assert rt.service.engine.pooled_bytes() == 0
+        assert rt.service_metrics()["admitted_reservation_bytes"] == 0
+        assert rt.drain(timeout=10)
+
+
+def test_runtime_wait_on_finished_job_and_subscribe_after_terminal():
+    t = _t1()
+    with ServiceRuntime(device_budget_bytes=64 << 20, queues=2) as rt:
+        j = rt.submit(_req(t, seed=0, iters=2))
+        rt.wait(j, timeout=120)
+        # both of these must return instantly instead of hanging
+        assert rt.wait(j, timeout=1).state == "done"
+        assert list(rt.subscribe(j)) == []
+        with pytest.raises(ValueError, match="unknown job id"):
+            rt.wait(j + 99)
+
+
+def test_runtime_weighted_tenants_end_to_end():
+    """3 concurrent tenants with weights (2, 1, 1) through the threaded
+    runtime: shares land within 10% of 2:1:1 (same stride math, now
+    driven by the worker thread)."""
+    t = _t1()
+    with ServiceRuntime(device_budget_bytes=64 << 20, queues=2) as rt:
+        rt.submit(_req(t, seed=0, iters=8, tenant="A", weight=2.0))
+        rt.submit(_req(t, seed=1, iters=4, tenant="B", weight=1.0))
+        rt.submit(_req(t, seed=2, iters=4, tenant="C", weight=1.0))
+        assert rt.drain(timeout=240)
+        m = rt.service_metrics()
+    assert m["tenant_iterations"] == {"A": 8, "B": 4, "C": 4}
+    for tenant, expected in (("A", 0.5), ("B", 0.25), ("C", 0.25)):
+        assert abs(m["tenant_shares"][tenant] - expected) <= 0.1 * expected
+
+
+def test_runtime_subscribe_unknown_job_raises():
+    with ServiceRuntime(device_budget_bytes=64 << 20) as rt:
+        with pytest.raises(ValueError, match="unknown job id"):
+            rt.subscribe(42)
+
+
+def test_runtime_worker_failure_surfaces_instead_of_hanging():
+    """An exception escaping the scheduling quantum (here: a broken
+    observer) must not silently kill the worker thread — drain() and
+    submit() raise instead of blocking forever."""
+    t = _t1()
+    with ServiceRuntime(device_budget_bytes=64 << 20, queues=2) as rt:
+        def bomb(job, kind):
+            if kind == "iteration":
+                raise RuntimeError("observer boom")
+        rt.scheduler.observers.append(bomb)
+        rt.submit(_req(t, seed=0, iters=5))
+        with pytest.raises(RuntimeError, match="worker failed"):
+            rt.drain(timeout=60)
+        with pytest.raises(RuntimeError, match="worker failed"):
+            rt.submit(_req(t, seed=1, iters=1))
+
+
+def test_runtime_stop_is_idempotent_and_restart_rejected():
+    rt = ServiceRuntime(device_budget_bytes=64 << 20).start()
+    with pytest.raises(RuntimeError, match="already started"):
+        rt.start()
+    rt.stop()
+    rt.stop()                                     # safe no-op

@@ -102,10 +102,13 @@ def test_fast_path_and_streaming_share_one_budget():
                                         seed=0, build=BUILD))
     assert svc.status(js).backend == "in_memory"      # fast path
     assert svc.status(jb).backend == "streamed"       # too big -> streams
-    # measured admission: exactly the resident copy + the pooled reservation
+    # measured admission: the resident copy + the pooled reservation + each
+    # job's (never pooled) factor working set
     m = svc.service_metrics()
     assert m["admitted_reservation_bytes"] == \
-        h_small.in_memory_bytes + h_big.spec.bytes_in_flight(2)
+        h_small.in_memory_bytes + factor_bytes(t_small.dims, 4, np.float32) \
+        + h_big.spec.bytes_in_flight(2) \
+        + factor_bytes(t_big.dims, 4, np.float32)
     svc.run()
     m = svc.service_metrics()
     assert svc.status(js).state == "done" and svc.status(jb).state == "done"
@@ -161,7 +164,9 @@ def test_tenants_share_pooled_state():
     """Plans over one pool entry charge the budget once, whichever pool.
 
     Same-content tensors under a big budget share ONE device-resident copy;
-    under a tight budget, same-shape tensors share ONE reservation."""
+    under a tight budget, same-shape tensors share ONE reservation.  Each
+    job's factor working set is charged per job on top of the pooled entry
+    (it is private to the job, never shared)."""
     # residency pooling: 3 tenants, one DeviceBLCO copy, charged once
     svc = DecompositionService(device_budget_bytes=64 << 20, queues=2)
     for s in range(3):                            # same tensor content 3x
@@ -170,27 +175,101 @@ def test_tenants_share_pooled_state():
     assert svc.engine.resident_count == 1         # one pooled resident copy
     assert svc.engine.pool_size == 0              # nothing streams
     one = svc.scheduler.jobs[0].handle.in_memory_bytes
-    assert svc.service_metrics()["admitted_reservation_bytes"] == one
+    fb = factor_bytes(svc.scheduler.jobs[0].handle.dims, 4, np.float32)
+    assert svc.service_metrics()["admitted_reservation_bytes"] == one + 3 * fb
     svc.run()
-    assert svc.service_metrics()["peak_admitted_reservation_bytes"] == one
+    assert svc.service_metrics()["peak_admitted_reservation_bytes"] == \
+        one + 3 * fb
     assert svc.engine.resident_count == 0         # released at the end
 
     # reservation pooling: budget below residency -> all three stream
-    # through one pooled shape, charged once
+    # through one pooled shape, charged once (+ one working set per job)
     probe = TensorRegistry()
     h = probe.register(_t1(), build=BUILD)
     res_bytes = h.spec.bytes_in_flight(2)
-    budget = res_bytes + factor_bytes(h.dims, 4, np.float32) + 1024
-    assert budget < h.in_memory_bytes + factor_bytes(h.dims, 4, np.float32)
+    budget = res_bytes + 3 * fb + 1024
+    assert budget < h.in_memory_bytes + fb        # residency can't fit
     svc = DecompositionService(device_budget_bytes=budget, queues=2)
     for s in range(3):
         svc.submit(SubmitDecomposition(tensor=_t1(), rank=4, iters=2, seed=s,
                                        build=BUILD))
     assert svc.engine.pool_size == 1              # one pooled shape
     assert svc.engine.resident_count == 0
-    assert svc.service_metrics()["admitted_reservation_bytes"] == res_bytes
+    assert svc.service_metrics()["admitted_reservation_bytes"] == \
+        res_bytes + 3 * fb
     svc.run()
-    assert svc.service_metrics()["peak_admitted_reservation_bytes"] == res_bytes
+    assert svc.service_metrics()["peak_admitted_reservation_bytes"] == \
+        res_bytes + 3 * fb
+
+
+def test_admission_charges_working_set_no_overcommit():
+    """ISSUE 4 satellite: K admitted same-tensor jobs hold exactly
+    K * factor_bytes + ONE pooled tensor copy.
+
+    The old ``try_plan`` checked the factor working set at admission but
+    never charged it to the ledger, so every later same-tensor job passed a
+    check that assumed ``working`` was free — the budget could be
+    overcommitted by N x factor_bytes.  This test fails on that code: all
+    three jobs were admitted against a budget sized for two."""
+    t = _t1()
+    probe = TensorRegistry()
+    h = probe.register(t, build=BUILD)
+    fb = factor_bytes(h.dims, 4, np.float32)
+    budget = h.in_memory_bytes + 2 * fb       # one copy + TWO working sets
+    svc = DecompositionService(device_budget_bytes=budget, queues=2)
+    ids = [svc.submit(SubmitDecomposition(tensor=t, rank=4, iters=2, seed=s,
+                                          tol=0.0, build=BUILD))
+           for s in range(3)]
+    states = [svc.status(j).state for j in ids]
+    assert states == ["running", "running", "queued"]
+    m = svc.service_metrics()
+    assert m["admitted_reservation_bytes"] == h.in_memory_bytes + 2 * fb
+    assert m["admitted_reservation_bytes"] <= budget  # ledger == reality
+    svc.run()
+    assert all(svc.status(j).state == "done" for j in ids)
+    assert svc.service_metrics()["peak_admitted_reservation_bytes"] <= budget
+    assert svc.service_metrics()["admitted_reservation_bytes"] == 0
+
+
+def test_pool_join_branch_checks_working_set():
+    """ISSUE 4 satellite: the resident pool-join branch (resident cost 0)
+    must still check AND charge the joiner's working set — the old code
+    admitted any sharer of a pooled copy unconditionally."""
+    t = _t1()
+    probe = TensorRegistry()
+    h = probe.register(t, build=BUILD)
+    fb = factor_bytes(h.dims, 4, np.float32)
+    budget = h.in_memory_bytes + fb           # exactly ONE job fits
+    svc = DecompositionService(device_budget_bytes=budget, queues=2)
+    j0 = svc.submit(SubmitDecomposition(tensor=t, rank=4, iters=2, seed=0,
+                                        tol=0.0, build=BUILD))
+    j1 = svc.submit(SubmitDecomposition(tensor=t, rank=4, iters=2, seed=1,
+                                        tol=0.0, build=BUILD))
+    assert svc.status(j0).state == "running"
+    assert svc.status(j1).state == "queued"   # joining is NOT free
+    assert svc.service_metrics()["admitted_reservation_bytes"] == budget
+    svc.run()
+    assert svc.status(j1).state == "done"     # admitted once j0 released
+    assert svc.service_metrics()["peak_admitted_reservation_bytes"] <= budget
+
+
+def test_evict_pinned_handle_raises():
+    """ISSUE 4 satellite: eviction of a handle whose chunks live plans
+    still reference raises instead of corrupting the running jobs."""
+    svc = DecompositionService(device_budget_bytes=64 << 20, queues=2)
+    j0 = svc.submit(SubmitDecomposition(tensor=_t1(), rank=4, iters=2,
+                                        seed=0, tol=0.0, build=BUILD))
+    j1 = svc.submit(SubmitDecomposition(tensor=_t1(), rank=4, iters=2,
+                                        seed=1, tol=0.0, build=BUILD))
+    key = svc.scheduler.jobs[j0].handle.key
+    assert svc.scheduler.jobs[j0].handle.pins == 2    # both live plans
+    with pytest.raises(RuntimeError, match="pinned by 2 live plan"):
+        svc.registry.evict(key)
+    assert svc.registry.get(key) is not None          # still cached intact
+    svc.run()
+    assert svc.scheduler.jobs[j0].handle.pins == 0    # plans closed
+    assert svc.registry.evict(key)                    # now safe
+    assert svc.registry.get(key) is None
 
 
 def test_oversized_job_rejected_at_submit():

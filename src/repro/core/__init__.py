@@ -11,7 +11,8 @@ from .baselines import (COOFormat, coo_mttkrp, FCOOFormat, fcoo_mttkrp,
                         CSFFormat, csf_mttkrp)
 from .cp_als import (cp_als, cp_als_init, cp_als_step, as_mttkrp_fn, CPResult,
                      CPState, init_factors, reconstruct_dense)
-from .streaming import EngineStats, OOMExecutor, ReservationSpec, StreamStats
+from .streaming import (EngineStats, LaunchChunks, OOMExecutor,
+                        ReservationSpec, StreamStats)
 from .embed_grad import embedding_lookup
 
 __all__ = [
@@ -25,6 +26,7 @@ __all__ = [
     "CSFFormat", "csf_mttkrp",
     "cp_als", "cp_als_init", "cp_als_step", "as_mttkrp_fn", "CPResult",
     "CPState", "init_factors", "reconstruct_dense",
-    "EngineStats", "OOMExecutor", "ReservationSpec", "StreamStats",
+    "EngineStats", "LaunchChunks", "OOMExecutor", "ReservationSpec",
+    "StreamStats",
     "embedding_lookup",
 ]

@@ -15,8 +15,8 @@ pending blocks with compute on active blocks. The JAX adaptation:
 * the factor matrices and the (I_mode, R) accumulator are device-resident;
   only nnz data streams.
 
-The building blocks (``ReservationSpec``, ``prepare_chunks``,
-``stream_mttkrp``) are free functions so higher layers can pool them:
+The building blocks (``ReservationSpec``, ``LaunchChunks``,
+``stream_mttkrp``) are free-standing so higher layers can pool them:
 ``repro.service.executor`` streams many tenants' tensors through one shared
 set of reservation shapes, reusing the same compiled executables.
 ``OOMExecutor`` is the single-tensor convenience wrapper.
@@ -58,8 +58,10 @@ class EngineStats:
     backend: str = ""
     mttkrp_calls: int = 0
     h2d_bytes: int = 0
+    disk_bytes: int = 0          # disk->host bytes fetched (disk-streamed plans)
     launches: int = 0
     put_time_s: float = 0.0
+    disk_time_s: float = 0.0     # host wall time fetching chunks from the store
     dispatch_time_s: float = 0.0
     device_time_s: float = 0.0
     total_time_s: float = 0.0
@@ -73,8 +75,10 @@ class EngineStats:
             "backend": self.backend,
             "mttkrp_calls": self.mttkrp_calls,
             "h2d_bytes": self.h2d_bytes,
+            "disk_bytes": self.disk_bytes,
             "launches": self.launches,
             "put_time_s": self.put_time_s,
+            "disk_time_s": self.disk_time_s,
             "dispatch_time_s": self.dispatch_time_s,
             "device_time_s": self.device_time_s,
             "total_time_s": self.total_time_s,
@@ -118,30 +122,65 @@ def reservation_for(blco: BLCOTensor,
                            value_itemsize=blco.values.dtype.itemsize)
 
 
-def prepare_chunks(blco: BLCOTensor, reservation_nnz: int):
-    """Pad every launch to the reservation size (host-side, once).
+class LaunchChunks:
+    """Lazily padded reservation chunks of a host-resident BLCO (re-iterable).
 
-    Returns a list of (hi, lo, vals, bases, n) numpy tuples ready for
-    device_put. Zero-padding is exact for MTTKRP: pad slots delinearize to
-    coordinate 0 with value 0, contributing +0.0 to row 0.
+    Each iteration pads ONE launch at a time to the reservation size, so the
+    streaming loop's host overhead is O(queues x reservation) padded buffers
+    in flight instead of all launches resident at once (the pre-store code
+    eagerly materialized every padded launch up front, which made the "OOM"
+    path require more host memory than the tensor itself).  Zero-padding is
+    exact for MTTKRP: pad slots delinearize to coordinate 0 with value 0,
+    contributing +0.0 to row 0.
+
+    ``pads`` counts chunk materializations — the regression observable that
+    construction does no padding work and each ``mttkrp`` call pads exactly
+    ``len(self)`` chunks.
     """
-    b = blco
-    bases_all = b.block_upper_bases()
-    block_ids = b.element_block_ids()
-    chunks = []
-    r = reservation_nnz
-    for launch in b.launches:
+
+    def __init__(self, blco: BLCOTensor, reservation_nnz: int):
+        r = int(reservation_nnz)
+        max_launch = max((l.nnz for l in blco.launches), default=0)
+        if max_launch > r:
+            raise ValueError(f"launch of {max_launch} nnz exceeds "
+                             f"reservation {r}")
+        self.blco = blco
+        self.reservation_nnz = r
+        self._bases_all = blco.block_upper_bases()
+        self._block_ids = blco.element_block_ids()
+        self.pads = 0
+
+    def __len__(self) -> int:
+        return len(self.blco.launches)
+
+    def chunk(self, i: int):
+        """Pad launch ``i`` to the reservation (one fresh numpy tuple)."""
+        b = self.blco
+        r = self.reservation_nnz
+        launch = b.launches[i]
         s, e = launch.start, launch.end
         n = e - s
-        if n > r:
-            raise ValueError(f"launch of {n} nnz exceeds reservation {r}")
         hi = np.zeros(r, np.uint32); hi[:n] = b.idx_hi[s:e]
         lo = np.zeros(r, np.uint32); lo[:n] = b.idx_lo[s:e]
         vals = np.zeros(r, b.values.dtype); vals[:n] = b.values[s:e]
         bases = np.zeros((r, b.order), np.int32)
-        bases[:n] = bases_all[block_ids[s:e]]
-        chunks.append((hi, lo, vals, bases, n))
-    return chunks
+        bases[:n] = self._bases_all[self._block_ids[s:e]]
+        self.pads += 1
+        return (hi, lo, vals, bases, n)
+
+    def __iter__(self):
+        for i in range(len(self)):
+            yield self.chunk(i)
+
+
+def prepare_chunks(blco: BLCOTensor, reservation_nnz: int):
+    """Pad every launch to the reservation size, materialized as a list.
+
+    The eager variant of :class:`LaunchChunks` — the in-memory regime's
+    launch cache genuinely needs every padded launch at once (it stacks
+    them); streaming callers should hold a ``LaunchChunks`` instead.
+    """
+    return list(LaunchChunks(blco, reservation_nnz))
 
 
 def stream_mttkrp(chunks, blco: BLCOTensor, factors, mode: int, *,
@@ -149,13 +188,18 @@ def stream_mttkrp(chunks, blco: BLCOTensor, factors, mode: int, *,
                   copies: int = DEFAULT_COPIES,
                   stats: StreamStats | None = None,
                   kernel: str = "xla", interpret: bool = True):
-    """Stream prepared reservation chunks through the launch kernel.
+    """Stream reservation chunks through the launch kernel.
 
     Keeps up to ``queues`` H2D transfers in flight ahead of compute (the
-    paper's queue overlap). ``chunks`` must all share one reservation shape
-    so every launch hits the same compiled executable.  ``kernel`` selects
-    the per-chunk compute: the XLA reference dataflow or the fused
-    single-``pallas_call`` pipeline (``repro.kernels.fused``).
+    paper's queue overlap). ``chunks`` is any (re-)iterable of
+    ``(hi, lo, vals, bases, n)`` tuples that all share one reservation
+    shape, so every launch hits the same compiled executable — a lazily
+    padding :class:`LaunchChunks` (host-resident tensor), a disk-backed
+    ``repro.store`` chunk source (mmap'd slices), or a plain list.  Chunks
+    are pulled one at a time, so the host-side window never exceeds the
+    ``queues`` transfers in flight.  ``kernel`` selects the per-chunk
+    compute: the XLA reference dataflow or the fused single-``pallas_call``
+    pipeline (``repro.kernels.fused``).
     """
     b = blco
     if resolution == "auto":
@@ -232,7 +276,7 @@ class OOMExecutor:
         self.queues = queues
         self.kernel = kernel
         self.spec = reservation_for(blco, reservation_nnz)
-        self._prepared = prepare_chunks(blco, self.spec.nnz)
+        self._prepared = LaunchChunks(blco, self.spec.nnz)
         self.stats = EngineStats(backend="streamed")
 
     @property

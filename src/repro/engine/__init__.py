@@ -6,13 +6,16 @@
     plan.device_bytes(); plan.stats(); plan.close()
 
 Backends: InMemoryPlan (device-resident), StreamedPlan (out-of-memory,
-fixed reservations), ShardedPlan (mesh scale-out), BaselinePlan
+fixed reservations), DiskStreamedPlan (disk-resident store, mmap'd chunks
+— ``repro.store``), ShardedPlan (mesh scale-out), BaselinePlan
 (COO/F-COO/CSF parity).  ``plan_for`` implements the paper's regime
-decision; the ``MTTKRPEngine``/``ExecutionPlan`` protocols let higher
-layers (the multi-tenant service) substitute pooled variants.
+decision (give it ``host_budget_bytes`` to extend it to the disk tier);
+the ``MTTKRPEngine``/``ExecutionPlan`` protocols let higher layers (the
+multi-tenant service) substitute pooled variants.
 
-In-memory and streamed plans take ``kernel="xla"`` (reference dataflow)
-or ``kernel="pallas"`` (fused single-``pallas_call`` pipeline).
+In-memory, streamed, and disk-streamed plans take ``kernel="xla"``
+(reference dataflow) or ``kernel="pallas"`` (fused single-``pallas_call``
+pipeline).
 """
 from repro.core.mttkrp import KERNELS
 from repro.core.streaming import EngineStats
@@ -21,11 +24,12 @@ from .api import ExecutionPlan, MTTKRPEngine, factor_bytes, in_memory_bytes
 from .plans import (BASELINE_KINDS, BaselinePlan, InMemoryPlan, ShardedPlan,
                     StreamedPlan, sharded_bytes)
 from .select import AUTO_BACKENDS, DefaultEngine, plan_for
+from repro.store import DiskStreamedPlan
 
 __all__ = [
     "EngineStats", "ExecutionPlan", "MTTKRPEngine",
     "factor_bytes", "in_memory_bytes", "sharded_bytes",
-    "InMemoryPlan", "StreamedPlan", "ShardedPlan", "BaselinePlan",
-    "BASELINE_KINDS", "AUTO_BACKENDS", "KERNELS", "DefaultEngine",
-    "plan_for",
+    "InMemoryPlan", "StreamedPlan", "DiskStreamedPlan", "ShardedPlan",
+    "BaselinePlan", "BASELINE_KINDS", "AUTO_BACKENDS", "KERNELS",
+    "DefaultEngine", "plan_for",
 ]

@@ -25,9 +25,8 @@ import numpy as np
 from repro.core import baselines
 from repro.core.blco import BLCOTensor, decode_coords
 from repro.core.mttkrp import DEFAULT_COPIES, DeviceBLCO, validate_kernel
-from repro.core.streaming import (EngineStats, ReservationSpec,
-                                  prepare_chunks, reservation_for,
-                                  stream_mttkrp)
+from repro.core.streaming import (EngineStats, LaunchChunks, ReservationSpec,
+                                  reservation_for, stream_mttkrp)
 from repro.core.tensor import SparseTensor, from_coo
 
 from .api import in_memory_bytes
@@ -120,8 +119,11 @@ class StreamedPlan:
         self.interpret = interpret
         self.spec = spec if spec is not None \
             else reservation_for(blco, reservation_nnz)
+        # chunks are padded LAZILY, one launch per pull inside the streaming
+        # loop: the host window is O(queues x reservation), never all
+        # launches resident (the paper's out-of-memory premise)
         self._chunks = chunks if chunks is not None \
-            else prepare_chunks(blco, self.spec.nnz)
+            else LaunchChunks(blco, self.spec.nnz)
         self._stats = EngineStats(backend=self.backend)
         self._closed = False
 
@@ -138,6 +140,12 @@ class StreamedPlan:
     def device_bytes(self) -> int:
         """Reservation bytes in flight (the only device-resident state)."""
         return 0 if self._closed else self.spec.bytes_in_flight(self.queues)
+
+    def host_window_bytes(self) -> int:
+        """Padded host bytes the streaming loop holds at once (bounded by
+        the queue depth — NOT the whole tensor's padded launches)."""
+        return 0 if self._closed else \
+            self.spec.bytes_per_launch * self.queues
 
     def stats(self) -> EngineStats:
         return self._stats

@@ -1,24 +1,33 @@
 """``plan_for``: the paper's regime decision as a one-call auto-selector.
 
-    sharded    a mesh context is active (repro.dist.context) or passed in —
-               multi-device capacity, route through core.distributed;
-    in_memory  the tensor's true device footprint (hi + lo + vals + bases,
-               padded) plus the rank-R factor working set fits the budget —
-               the paper's in-memory regime, zero per-iteration H2D;
-    streamed   otherwise — fixed reservations stream the host-resident
-               tensor (the paper's out-of-memory regime), provided the
-               in-flight reservation + factor working set fits;
-    baselines  never auto-selected; request ``backend="coo"|"fcoo"|"csf"``
-               explicitly for benchmark parity.
+    sharded        a mesh context is active (repro.dist.context) or passed
+                   in — multi-device capacity, route through
+                   core.distributed;
+    in_memory      the tensor's true device footprint (hi + lo + vals +
+                   bases, padded) plus the rank-R factor working set fits
+                   the budget — the paper's in-memory regime, zero
+                   per-iteration H2D;
+    disk_streamed  the tensor exceeds the HOST budget
+                   (``host_budget_bytes``) — spill it to the persistent
+                   store and stream mmap'd reservation chunks straight to
+                   the device (one tier below the paper's OOM regime);
+    streamed       otherwise — fixed reservations stream the host-resident
+                   tensor (the paper's out-of-memory regime), provided the
+                   in-flight reservation + factor working set fits;
+    baselines      never auto-selected; request ``backend="coo"|"fcoo"|
+                   "csf"`` explicitly for benchmark parity.
 
 ``DefaultEngine`` wraps the same decision behind the ``MTTKRPEngine``
 protocol for callers that hold an engine rather than call ``plan_for``.
 """
 from __future__ import annotations
 
+import os
+import tempfile
+
 import jax.numpy as jnp
 
-from repro.core.blco import BLCOTensor
+from repro.core.blco import BLCOTensor, format_bytes
 from repro.core.mttkrp import DEFAULT_COPIES, validate_kernel
 from repro.core.streaming import reservation_for
 from repro.dist.context import get_mesh
@@ -27,7 +36,8 @@ from .api import factor_bytes, in_memory_bytes
 from .plans import (BASELINE_KINDS, BaselinePlan, InMemoryPlan, ShardedPlan,
                     StreamedPlan, sharded_bytes)
 
-AUTO_BACKENDS = ("auto", "in_memory", "streamed", "sharded") + BASELINE_KINDS
+AUTO_BACKENDS = ("auto", "in_memory", "streamed", "disk_streamed",
+                 "sharded") + BASELINE_KINDS
 
 
 def plan_for(blco: BLCOTensor, device_budget_bytes: int, *, rank: int,
@@ -35,7 +45,8 @@ def plan_for(blco: BLCOTensor, device_budget_bytes: int, *, rank: int,
              queues: int = 4, reservation_nnz: int | None = None,
              tensor=None, resolution: str = "auto",
              copies: int = DEFAULT_COPIES, kernel: str = "xla",
-             interpret: bool = True):
+             interpret: bool = True, host_budget_bytes: int | None = None,
+             store_path: str | None = None):
     """Build the ExecutionPlan for ``blco`` under ``device_budget_bytes``.
 
     ``tensor`` (the original SparseTensor) is only consulted for baseline
@@ -43,7 +54,15 @@ def plan_for(blco: BLCOTensor, device_budget_bytes: int, *, rank: int,
     ``kernel`` selects the compute path for the in-memory and streamed
     regimes: ``"xla"`` (reference dataflow, scan over the launch cache) or
     ``"pallas"`` (fused single-``pallas_call`` pipeline; ``interpret=False``
-    on a real TPU).  Raises ValueError when no regime fits the budget.
+    on a real TPU).
+
+    ``host_budget_bytes`` extends the regime decision one memory tier
+    down: when the tensor's host footprint (``format_bytes``) exceeds it,
+    the tensor is spilled to the persistent store at ``store_path`` (an
+    anonymous temp file, deleted on ``plan.close()``, when not given) and
+    a ``DiskStreamedPlan`` feeds the device from mmap'd chunks with an
+    O(queues x reservation) host window.  Raises ValueError when no
+    regime fits the budget.
     """
     if backend not in AUTO_BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; "
@@ -73,6 +92,36 @@ def plan_for(blco: BLCOTensor, device_budget_bytes: int, *, rank: int,
                 f"budget is {device_budget_bytes} B")
         return ShardedPlan(blco, mesh)
 
+    if backend == "disk_streamed" or (
+            backend == "auto" and host_budget_bytes is not None
+            and format_bytes(blco) > host_budget_bytes):
+        from repro.store import DiskStreamedPlan
+        spec = reservation_for(blco, reservation_nnz)
+        if spec.bytes_in_flight(queues) + working > device_budget_bytes:
+            raise ValueError(
+                f"disk-streamed plan needs "
+                f"{spec.bytes_in_flight(queues) + working} B in flight "
+                f"(reservation {spec.nnz} nnz x {queues} queues + factors) "
+                f"but the device budget is {device_budget_bytes} B")
+        if store_path is None:
+            fd, path = tempfile.mkstemp(suffix=".blco")
+            os.close(fd)
+            delete = True
+        else:
+            path, delete = store_path, False
+        try:
+            return DiskStreamedPlan.spill(
+                blco, path, reservation_nnz=spec.nnz, delete_on_close=delete,
+                queues=queues, resolution=resolution, copies=copies,
+                kernel=kernel, interpret=interpret)
+        except BaseException:
+            if delete:              # don't orphan the anonymous spill file
+                try:
+                    os.unlink(path)
+                except OSError:
+                    pass
+            raise
+
     if backend == "in_memory" or (backend == "auto" and
                                   in_memory_bytes(blco) + working
                                   <= device_budget_bytes):
@@ -101,13 +150,15 @@ class DefaultEngine:
 
     def __init__(self, *, queues: int = 4, mesh=None, backend: str = "auto",
                  reservation_nnz: int | None = None, kernel: str = "xla",
-                 interpret: bool = True):
+                 interpret: bool = True,
+                 host_budget_bytes: int | None = None):
         self.queues = queues
         self.mesh = mesh
         self.backend = backend
         self.reservation_nnz = reservation_nnz
         self.kernel = kernel
         self.interpret = interpret
+        self.host_budget_bytes = host_budget_bytes
 
     def plan(self, blco: BLCOTensor, *, device_budget_bytes: int, rank: int,
              dtype=jnp.float32):
@@ -115,4 +166,5 @@ class DefaultEngine:
                         backend=self.backend, mesh=self.mesh,
                         queues=self.queues,
                         reservation_nnz=self.reservation_nnz,
-                        kernel=self.kernel, interpret=self.interpret)
+                        kernel=self.kernel, interpret=self.interpret,
+                        host_budget_bytes=self.host_budget_bytes)

@@ -6,11 +6,14 @@ measured device-byte admission budget, each executing through an
 ``ExecutionPlan`` — device-resident for small tensors, streamed through
 pooled reservations for large ones.
 
-    registry   BLCO construction cache keyed by content fingerprint
-    executor   ServiceEngine: pooled plans (reservations + device residency)
+    registry   two-tier (host/disk) BLCO cache keyed by content
+               fingerprint, with LRU spilling to the persistent store
+    executor   ServiceEngine: pooled plans (reservations + device
+               residency + disk streaming for spilled tensors)
     scheduler  FIFO admission by plan.device_bytes() + weighted stride
                fair share with cancellation
     api        typed requests/responses + the DecompositionService facade
+               (incl. snapshot()/restore() persistence)
     metrics    per-job and service-wide counters (unified EngineStats)
     runtime    ServiceRuntime: threaded async driver with job cancellation
                and streaming per-iteration status feeds
@@ -18,8 +21,8 @@ pooled reservations for large ones.
 from .api import (CancelJob, CancelResult, DecompositionResult,
                   DecompositionService, JobStatus, MTTKRPQuery, SetWeight,
                   SubmitDecomposition, WeightUpdate, DEFAULT_DEVICE_BUDGET)
-from .executor import (PooledExecutor, PooledInMemoryPlan, PooledStreamedPlan,
-                       ServiceEngine)
+from .executor import (PooledDiskStreamedPlan, PooledExecutor,
+                       PooledInMemoryPlan, PooledStreamedPlan, ServiceEngine)
 from .metrics import JobMetrics, ServiceMetrics
 from .registry import BuildParams, TensorHandle, TensorRegistry, fingerprint
 from .runtime import JobEvent, ServiceRuntime, StatusFeed
@@ -31,7 +34,8 @@ __all__ = [
     "DecompositionService", "JobStatus", "MTTKRPQuery", "SetWeight",
     "SubmitDecomposition", "WeightUpdate", "DEFAULT_DEVICE_BUDGET",
     "ServiceEngine", "PooledExecutor", "PooledInMemoryPlan",
-    "PooledStreamedPlan", "JobMetrics", "ServiceMetrics",
+    "PooledStreamedPlan", "PooledDiskStreamedPlan",
+    "JobMetrics", "ServiceMetrics",
     "BuildParams", "TensorHandle", "TensorRegistry", "fingerprint",
     "JobEvent", "ServiceRuntime", "StatusFeed",
     "Job", "JobScheduler", "QUEUED", "RUNNING", "DONE", "FAILED",

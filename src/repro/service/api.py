@@ -116,8 +116,10 @@ class DecompositionService:
 
     def __init__(self, *, device_budget_bytes: int = DEFAULT_DEVICE_BUDGET,
                  queues: int = 4, max_active: int | None = None,
-                 kernel: str = "xla"):
-        self.registry = TensorRegistry()
+                 kernel: str = "xla", store_dir: str | None = None,
+                 host_budget_bytes: int | None = None):
+        self.registry = TensorRegistry(store_dir=store_dir,
+                                       host_budget_bytes=host_budget_bytes)
         self.engine = ServiceEngine(queues=queues, kernel=kernel)
         self.metrics = ServiceMetrics()
         self.scheduler = sched.JobScheduler(
@@ -131,10 +133,17 @@ class DecompositionService:
 
     # ------------------------------------------------------------- requests
     def submit(self, req: SubmitDecomposition) -> int:
-        """Register (or cache-hit) the tensor and enqueue a CP-ALS job."""
+        """Register (or cache-hit) the tensor and enqueue a CP-ALS job.
+
+        A spilled/adopted tensor is reloaded to the host tier when the
+        registry's host budget has room (restoring the in-memory fast
+        path after restarts and evictions); under host pressure the stub
+        stays and the job disk-streams from the store.
+        """
         hits_before = self.registry.hits
         handle = self.registry.register(req.tensor, build=req.build,
                                         reservation_nnz=req.reservation_nnz)
+        handle = self.registry.maybe_load(handle.key)
         self._sync_cache_counters()
         job_id = self.scheduler.submit(handle, rank=req.rank,
                                        iters=req.iters, tol=req.tol,
@@ -194,6 +203,7 @@ class DecompositionService:
                              f"order-{query.tensor.order} tensor")
         handle = self.registry.register(query.tensor, build=query.build,
                                         reservation_nnz=query.reservation_nnz)
+        handle = self.registry.maybe_load(handle.key)
         self._sync_cache_counters()
         rank = query.factors[0].shape[1]
         remaining = self.scheduler.device_budget_bytes \
@@ -258,6 +268,32 @@ class DecompositionService:
     def service_metrics(self) -> dict[str, Any]:
         return self.metrics.snapshot()
 
+    # ------------------------------------------------------------ persistence
+    def snapshot(self, path: str) -> dict:
+        """Write a restartable snapshot (registry + job CPState) to ``path``.
+
+        Requires ``store_dir`` (the registry's spill store holds the
+        tensors; the snapshot holds only the manifest and checkpoints).
+        """
+        from repro.store import snapshot_service
+        manifest = snapshot_service(self, path)
+        self._sync_cache_counters()
+        return manifest
+
+    @classmethod
+    def restore(cls, path: str, **service_kwargs) -> "DecompositionService":
+        """A fresh service resuming every snapshotted job under its
+        original id (tensors adopt from the spill store, no BLCO rebuild)."""
+        from repro.store import restore_service
+        service = cls(**service_kwargs)
+        restore_service(path, service)
+        service._sync_cache_counters()
+        return service
+
     def _sync_cache_counters(self) -> None:
         self.metrics.blco_cache_hits = self.registry.hits
         self.metrics.blco_cache_misses = self.registry.misses
+        self.metrics.blco_disk_hits = self.registry.disk_hits
+        self.metrics.spills = self.registry.spills
+        self.metrics.spill_bytes_total = self.registry.spill_bytes
+        self.metrics.loads = self.registry.loads

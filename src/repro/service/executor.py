@@ -7,7 +7,10 @@ pools back the plans it hands out:
   ``ReservationSpec`` stream through identical device buffer shapes, so
   they hit the same compiled ``launch_mttkrp`` executable and the budget is
   charged once per pooled shape (the paper's reused queue reservations,
-  shared across tenants);
+  shared across tenants).  Both streaming *tiers* join this pool: host-
+  resident tensors (``PooledStreamedPlan``) and spilled, disk-resident
+  ones (``PooledDiskStreamedPlan``) — the store pads launches to the same
+  power-of-two reservations;
 * **residency pool** — jobs on the same registered tensor whose BLCO fits
   the remaining budget share ONE device-resident copy (``DeviceBLCO``),
   skipping per-iteration H2D entirely — the device-resident fast path
@@ -33,6 +36,7 @@ from repro.core.mttkrp import DeviceBLCO
 from repro.core.streaming import ReservationSpec
 from repro.engine.api import factor_bytes, in_memory_bytes
 from repro.engine.plans import InMemoryPlan, StreamedPlan
+from repro.store import DiskStreamedPlan
 
 from .registry import TensorHandle
 
@@ -75,6 +79,35 @@ class PooledStreamedPlan(StreamedPlan):
             return 0
         self._closed = True
         self._chunks = None                 # handle keeps its own reference
+        self._handle.unpin()
+        return self._engine._release_stream(self.spec) + self._working
+
+
+class PooledDiskStreamedPlan(DiskStreamedPlan):
+    """A per-job disk-streamed plan over a pooled reservation shape.
+
+    Spilled tensors stream mmap'd store chunks straight to the device;
+    because the store pads launches to the same power-of-two reservation
+    the host-streaming regime uses, the plan joins the SAME stream pool
+    (and compiled executable) as host-streamed plans of that spec.
+    """
+
+    def __init__(self, engine: "ServiceEngine", handle: TensorHandle,
+                 held_bytes: int, working_bytes: int = 0):
+        super().__init__(handle.open_stored(), queues=engine.queues,
+                         spec=handle.spec, kernel=engine.kernel)
+        self._engine = engine
+        self._handle = handle
+        self._held = held_bytes
+        self._working = working_bytes       # per-job factor set, never pooled
+
+    def device_bytes(self) -> int:
+        return 0 if self._closed else self._held + self._working
+
+    def close(self) -> int:
+        if self._closed:
+            return 0
+        super().close()
         self._handle.unpin()
         return self._engine._release_stream(self.spec) + self._working
 
@@ -132,11 +165,15 @@ class ServiceEngine:
         """Cheapest unpooled device need (the can-never-fit check).
 
         Every regime keeps the rank-R factor working set resident alongside
-        the tensor state, so it is part of the need either way.
+        the tensor state, so it is part of the need either way.  A spilled
+        handle's only regime is (disk-)streaming, and both streaming tiers
+        share the reservation cost.
         """
         working = factor_bytes(handle.dims, rank, dtype)
-        return working + min(handle.spec.bytes_in_flight(self.queues),
-                             in_memory_bytes(handle.blco))
+        stream = handle.spec.bytes_in_flight(self.queues)
+        if not handle.resident:
+            return working + stream
+        return working + min(stream, in_memory_bytes(handle.blco))
 
     # ---------------------------------------------------------------- plans
     def try_plan(self, handle: TensorHandle, *, rank: int,
@@ -151,9 +188,15 @@ class ServiceEngine:
         fits what is left of the budget (joining an existing copy makes the
         pooled part free and strictly better than streaming); streamed when
         the (pooled) reservation plus the working set fits; None when
-        neither does.
+        neither does.  A SPILLED handle admits straight from the store —
+        disk-streamed through the same pooled reservation shapes, without
+        ever reloading the tensor into host memory.
         """
         working = factor_bytes(handle.dims, rank, dtype)
+        if not handle.resident:
+            if self.streamed_cost(handle) + working <= budget_remaining:
+                return self._plan_disk(handle, working)
+            return None
         rc = self.resident_cost(handle)
         if rc + working <= budget_remaining:
             return self._plan_resident(handle, working)
@@ -176,8 +219,9 @@ class ServiceEngine:
         handle.pin()
         return PooledInMemoryPlan(self, handle, entry, held, working)
 
-    def _plan_streamed(self, handle: TensorHandle,
-                       working: int = 0) -> PooledStreamedPlan:
+    def _join_stream_pool(self, handle: TensorHandle) -> int:
+        """Join (or create) the pooled reservation entry for ``handle``;
+        pins the handle and returns the bytes newly charged (0 on join)."""
         entry = self._stream_pool.get(handle.spec)
         held = 0
         if entry is None:
@@ -185,7 +229,18 @@ class ServiceEngine:
             held = handle.spec.bytes_in_flight(self.queues)
         entry.refcount += 1
         handle.pin()
+        return held
+
+    def _plan_streamed(self, handle: TensorHandle,
+                       working: int = 0) -> PooledStreamedPlan:
+        held = self._join_stream_pool(handle)
         return PooledStreamedPlan(self, handle, held, working)
+
+    def _plan_disk(self, handle: TensorHandle,
+                   working: int = 0) -> PooledDiskStreamedPlan:
+        """Disk-streamed plan joining the same reservation pool as streamed."""
+        held = self._join_stream_pool(handle)
+        return PooledDiskStreamedPlan(self, handle, held, working)
 
     # ------------------------------------------------------------- releases
     def _release_stream(self, spec: ReservationSpec) -> int:

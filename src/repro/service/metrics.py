@@ -52,9 +52,11 @@ class JobMetrics:
             "backend": self.backend,
             "released_bytes": self.released_bytes,
             "h2d_bytes": self.stats.h2d_bytes,
+            "disk_bytes": self.stats.disk_bytes,
             "mttkrp_calls": self.stats.mttkrp_calls,
             "launches": self.stats.launches,
             "put_time_s": self.stats.put_time_s,
+            "disk_time_s": self.stats.disk_time_s,
             "dispatch_time_s": self.stats.dispatch_time_s,
             "device_time_s": self.stats.device_time_s,
         }
@@ -72,8 +74,15 @@ class ServiceMetrics:
     cancel_freed_bytes_total: int = 0    # budget bytes freed by cancel()
     blco_cache_hits: int = 0
     blco_cache_misses: int = 0
+    blco_disk_hits: int = 0              # registrations served off the store
+    spills: int = 0                      # host -> disk evictions (LRU/manual)
+    spill_bytes_total: int = 0           # host bytes freed by spilling
+    loads: int = 0                       # disk -> host reloads (un-spills)
+    jobs_restored: int = 0               # jobs resumed from a snapshot
     iterations_total: int = 0
     h2d_bytes_total: int = 0
+    disk_bytes_total: int = 0            # store->host traffic of retired jobs
+    disk_time_s_total: float = 0.0
     launches_total: int = 0
     # executed ALS sweeps per tenant: the observable the weighted fair
     # share is measured by (share_i ~ weight_i / sum(weights))
@@ -115,9 +124,16 @@ class ServiceMetrics:
             "cancel_freed_bytes_total": self.cancel_freed_bytes_total,
             "blco_cache_hits": self.blco_cache_hits,
             "blco_cache_misses": self.blco_cache_misses,
+            "blco_disk_hits": self.blco_disk_hits,
+            "spills": self.spills,
+            "spill_bytes_total": self.spill_bytes_total,
+            "loads": self.loads,
+            "jobs_restored": self.jobs_restored,
             "iterations_total": self.iterations_total,
             "iterations_per_sec": self.iterations_per_sec(),
             "h2d_bytes_total": self.h2d_bytes_total,
+            "disk_bytes_total": self.disk_bytes_total,
+            "disk_time_s_total": self.disk_time_s_total,
             "launches_total": self.launches_total,
             "tenant_iterations": dict(self.tenant_iterations),
             "tenant_shares": self.tenant_shares(),

@@ -1,24 +1,37 @@
-"""Tensor registry: a BLCO construction cache keyed by content fingerprint.
+"""Tensor registry: a two-tier BLCO cache keyed by content fingerprint.
 
 BLCO's defining property (paper §4.2) is that ONE tensor copy serves every
 mode and every decomposition run. In a multi-tenant service that property
 compounds: any number of jobs on the same tensor share one BLCO build, one
-set of reservation-padded launch chunks, and (via the pooled executor) one
-compiled executable per reservation shape. The cache key is a content
-fingerprint (dims + coordinates + values) combined with the build
-parameters, so a re-submitted tensor — even a different ``SparseTensor``
-object with identical content — is a hit, while changing ``target_bits`` or
-the blocking budget correctly misses.
+reservation shape, and (via the pooled executor) one compiled executable
+per shape. The cache key is a content fingerprint (dims + coordinates +
+values) combined with the build parameters, so a re-submitted tensor —
+even a different ``SparseTensor`` object with identical content — is a
+hit, while changing ``target_bits`` or the blocking budget correctly
+misses.
+
+The registry is **two-tier** (host ⊃ disk).  With a ``store_dir``, handles
+can be *spilled*: the BLCO is written to the persistent store
+(``repro.store``) and the host arrays dropped, leaving a stub handle that
+jobs disk-stream from (or explicitly ``load`` back).  With a
+``host_budget_bytes``, spilling is automatic: an LRU policy (least
+recently ``get``/registered first, pin-refcount-aware) keeps resident
+host bytes under the budget.  Because store files are named by
+fingerprint, a RESTARTED process re-registers the same tensor as a cache
+hit straight off disk — no BLCO rebuild — which is what makes service
+snapshots restart-safe.
 """
 from __future__ import annotations
 
 import dataclasses
 import hashlib
+import os
 
 import numpy as np
 
 from repro.core.blco import BLCOTensor, build_blco, format_bytes
-from repro.core.streaming import ReservationSpec, prepare_chunks, reservation_for
+from repro.core.streaming import (LaunchChunks, ReservationSpec,
+                                  reservation_for)
 from repro.core.tensor import SparseTensor
 
 
@@ -45,18 +58,27 @@ def fingerprint(t: SparseTensor, build: BuildParams,
 
 @dataclasses.dataclass
 class TensorHandle:
-    """A registered tensor: the single shared copy every job streams from."""
+    """A registered tensor: the single shared copy every job streams from.
+
+    Either host-resident (``blco``/``chunks`` set) or spilled to the store
+    (``store_path`` set, ``blco is None``) — a stub that keeps only the
+    O(1) metadata admission control needs.  ``chunks`` is a lazily padding
+    :class:`~repro.core.streaming.LaunchChunks`; nothing is padded until a
+    streaming plan actually pulls a launch.
+    """
     key: str
     dims: tuple
     nnz: int
     norm_x: float                # Frobenius norm (CP-ALS fit denominator)
-    blco: BLCOTensor
+    blco: BLCOTensor | None
     spec: ReservationSpec        # padded launch-buffer shape
-    chunks: list                 # reservation-padded launch chunks (host)
-    pins: int = 0                # live plans referencing blco/chunks
+    chunks: LaunchChunks | None  # lazy reservation-padded launch source
+    pins: int = 0                # live plans referencing blco/chunks/store
+    store_path: str | None = None   # persistent copy (spill tier)
+    last_used: int = 0           # registry LRU clock at last touch
 
     def pin(self) -> None:
-        """A plan now references this handle's blco/chunks (blocks evict)."""
+        """A plan now references this handle (blocks evict/spill)."""
         self.pins += 1
 
     def unpin(self) -> None:
@@ -69,25 +91,81 @@ class TensorHandle:
         return len(self.dims)
 
     @property
+    def resident(self) -> bool:
+        """True when the BLCO is host-resident (not just a disk stub)."""
+        return self.blco is not None
+
+    @property
+    def host_bytes(self) -> int:
+        """Host-resident bytes of this handle's tensor copy (0 if spilled)."""
+        return format_bytes(self.blco) if self.blco is not None else 0
+
+    @property
     def format_bytes(self) -> int:
-        """True device footprint of the format (hi + lo + vals + bases)."""
-        return format_bytes(self.blco)
+        """True device footprint of the format (hi + lo + vals + bases).
+
+        Computed from the metadata (nnz x per-element words) so it is
+        available for spilled stubs too; equals
+        ``core.format_bytes(self.blco)`` when resident.
+        """
+        return self.nnz * (4 + 4 + self.spec.value_itemsize + 4 * self.order)
 
     @property
     def in_memory_bytes(self) -> int:
         """Predicted device bytes of a resident (InMemoryPlan) copy."""
+        if self.blco is None:
+            raise RuntimeError(
+                f"tensor {self.key} is spilled to disk; load() it before "
+                f"planning a device-resident copy")
         from repro.engine.api import in_memory_bytes
         return in_memory_bytes(self.blco)
 
+    def open_stored(self):
+        """Open the persistent copy for disk-streaming (caller closes)."""
+        if self.store_path is None:
+            raise RuntimeError(f"tensor {self.key} has no persistent copy")
+        from repro.store import open_blco
+        return open_blco(self.store_path)
+
 
 class TensorRegistry:
-    """Fingerprint-keyed cache of BLCO builds + prepared launch chunks."""
+    """Fingerprint-keyed two-tier cache of BLCO builds.
 
-    def __init__(self):
+    ``store_dir``: directory of the persistent spill tier (files are
+    ``<fingerprint>.blco``); enables ``spill``/``persist``/``adopt`` and
+    restart-safe re-registration.  ``host_budget_bytes``: automatic LRU
+    spilling — after every operation that grows the resident set, the
+    least-recently-used unpinned handles are spilled until resident
+    ``host_bytes()`` fits the budget.
+    """
+
+    def __init__(self, *, store_dir: str | None = None,
+                 host_budget_bytes: int | None = None):
+        self.store_dir = store_dir
+        self.host_budget_bytes = host_budget_bytes
         self._cache: dict[str, TensorHandle] = {}
+        self._clock = 0
         self.hits = 0
         self.misses = 0
+        self.disk_hits = 0           # registrations served from the store
+        self.spills = 0
+        self.spill_bytes = 0         # host bytes freed by spilling
+        self.loads = 0               # un-spills (store -> host reloads)
 
+    # ---------------------------------------------------------------- paths
+    def _store_file(self, key: str) -> str:
+        if self.store_dir is None:
+            raise RuntimeError("registry has no store_dir; construct "
+                               "TensorRegistry(store_dir=...) to enable "
+                               "the spill tier")
+        os.makedirs(self.store_dir, exist_ok=True)
+        return os.path.join(self.store_dir, f"{key}.blco")
+
+    def _touch(self, handle: TensorHandle) -> None:
+        self._clock += 1
+        handle.last_used = self._clock
+
+    # ------------------------------------------------------------- register
     def register(self, t: SparseTensor, *,
                  build: BuildParams | None = None,
                  reservation_nnz: int | None = None) -> TensorHandle:
@@ -96,7 +174,25 @@ class TensorRegistry:
         handle = self._cache.get(key)
         if handle is not None:
             self.hits += 1
+            self._touch(handle)
             return handle
+        # restart path: the fingerprint names a store file written by a
+        # previous process — adopt the stub instead of rebuilding the BLCO.
+        # A damaged file (crash mid-write on an old layout, bit rot) must
+        # not brick registration while we hold the COO: fall through to a
+        # rebuild, which re-persists over it on the next spill.
+        if self.store_dir is not None:
+            path = os.path.join(self.store_dir, f"{key}.blco")
+            if os.path.exists(path):
+                from repro.store import StoreError
+                try:
+                    handle = self.adopt(key, path)
+                except StoreError:
+                    pass
+                else:
+                    self.hits += 1
+                    self.disk_hits += 1
+                    return handle
         self.misses += 1
         blco = build_blco(t, target_bits=build.target_bits,
                           max_nnz_per_block=build.max_nnz_per_block,
@@ -105,20 +201,154 @@ class TensorRegistry:
         handle = TensorHandle(
             key=key, dims=t.dims, nnz=t.nnz,
             norm_x=float(np.linalg.norm(t.values.astype(np.float64))),
-            blco=blco, spec=spec, chunks=prepare_chunks(blco, spec.nnz))
+            blco=blco, spec=spec, chunks=LaunchChunks(blco, spec.nnz))
         self._cache[key] = handle
+        self._touch(handle)
+        self._maybe_spill()
         return handle
 
+    def adopt(self, key: str, path: str) -> TensorHandle:
+        """Register a spilled stub straight from a store file (no COO, no
+        build) — the restart/snapshot entry point.
+
+        The file's section checksums are verified here, once, at adoption
+        (plans opening it later skip the re-read): silently streaming
+        bit-rotted values into every job on this tensor would be far
+        worse than the one sequential read.  Corruption raises the typed
+        ``StoreCorruptionError`` — which ``register`` turns into a
+        rebuild when it still holds the COO.
+        """
+        handle = self._cache.get(key)
+        if handle is not None:
+            self._touch(handle)
+            return handle
+        from repro.store import open_blco
+        with open_blco(path, verify=True) as stored:
+            if stored.fingerprint is not None and stored.fingerprint != key:
+                from repro.store import StoreCorruptionError
+                raise StoreCorruptionError(
+                    f"{path}: stored fingerprint {stored.fingerprint!r} "
+                    f"does not match registry key {key!r}")
+            handle = TensorHandle(
+                key=key, dims=stored.dims, nnz=stored.nnz,
+                norm_x=float(stored.norm_x or 0.0),
+                blco=None, spec=stored.spec, chunks=None,
+                store_path=path)
+        self._cache[key] = handle
+        self._touch(handle)
+        return handle
+
+    # ------------------------------------------------------------ spill tier
+    def persist(self, key: str) -> str:
+        """Ensure ``key`` has an up-to-date store file; returns its path.
+
+        Keeps the host copy (unlike ``spill``) — this is the snapshot
+        write path, safe to call on pinned handles.
+        """
+        handle = self._require(key)
+        if handle.store_path is not None:
+            return handle.store_path
+        path = self._store_file(key)
+        from repro.store import save_blco
+        save_blco(handle.blco, path, reservation_nnz=handle.spec.nnz,
+                  fingerprint=key, norm_x=handle.norm_x)
+        handle.store_path = path
+        return path
+
+    def spill(self, key: str) -> int:
+        """Write ``key``'s BLCO to the store and drop its host arrays.
+
+        Returns the host bytes freed.  Refuses pinned handles (live plans
+        hold the blco/chunks); a no-op (0) for already-spilled handles.
+        """
+        handle = self._require(key)
+        if not handle.resident:
+            return 0
+        if handle.pins > 0:
+            raise RuntimeError(
+                f"tensor {key} is pinned by {handle.pins} live plan(s); "
+                f"close them before spilling")
+        self.persist(key)
+        freed = handle.host_bytes
+        handle.blco = None
+        handle.chunks = None
+        self.spills += 1
+        self.spill_bytes += freed
+        return freed
+
+    def maybe_load(self, key: str) -> TensorHandle:
+        """Reload a spilled handle only when the host tier has room.
+
+        The submit-path policy: a stub whose reload would fit the host
+        budget comes back resident (so jobs regain the in-memory /
+        host-streamed fast paths after a restart or an eviction), while
+        a registry under genuine host pressure keeps the stub and lets
+        jobs disk-stream — reloading there would just thrash the LRU.
+        """
+        handle = self._require(key)
+        if handle.resident:
+            return handle
+        if self.host_budget_bytes is not None and \
+                self.host_bytes() + handle.format_bytes \
+                > self.host_budget_bytes:
+            return handle
+        return self.load(key)
+
+    def load(self, key: str) -> TensorHandle:
+        """Reload a spilled handle's BLCO from the store (un-spill).
+
+        The reload reuses the stored build verbatim — same fingerprint,
+        same blocks/launches/reservation, no re-construction — so a
+        load-after-spill (or after a process restart) is bit-identical to
+        the original registration.
+        """
+        handle = self._require(key)
+        self._touch(handle)
+        if handle.resident:
+            return handle
+        from repro.store import open_blco
+        with open_blco(handle.store_path) as stored:
+            handle.blco = stored.to_blco()
+        handle.chunks = LaunchChunks(handle.blco, handle.spec.nnz)
+        self.loads += 1
+        self._touch(handle)               # the reload makes it MRU
+        self._maybe_spill(keep=handle)
+        return handle
+
+    def _maybe_spill(self, keep: TensorHandle | None = None) -> None:
+        """LRU: spill least-recently-used unpinned handles over the budget.
+
+        ``keep`` exempts a handle the caller just made resident on
+        purpose (``load``): spilling it straight back would turn an
+        explicit reload into wasted I/O — like the pinned case, the
+        registry stays over budget instead.
+        """
+        if self.host_budget_bytes is None or self.store_dir is None:
+            return
+        while self.host_bytes() > self.host_budget_bytes:
+            victims = sorted(
+                (h for h in self._cache.values()
+                 if h.resident and h.pins == 0 and h is not keep),
+                key=lambda h: h.last_used)
+            if not victims:
+                return           # everything resident is pinned; over-budget
+            self.spill(victims[0].key)
+
+    # ---------------------------------------------------------------- lookup
     def get(self, key: str) -> TensorHandle | None:
-        return self._cache.get(key)
+        handle = self._cache.get(key)
+        if handle is not None:
+            self._touch(handle)
+        return handle
 
     def evict(self, key: str) -> bool:
-        """Drop a cached handle; refuses while any live plan references it.
+        """Drop a cached handle entirely; refuses while any plan holds it.
 
-        Streaming plans hold the handle's ``chunks`` for their whole
-        lifetime, so evicting a pinned handle would corrupt running jobs —
-        the refcount turns that silent corruption into an error (and makes
-        an LRU policy over ``host_bytes()`` safe to build on top).
+        Streaming plans hold the handle's ``chunks`` (or store file) for
+        their whole lifetime, so evicting a pinned handle would corrupt
+        running jobs — the refcount turns that silent corruption into an
+        error.  The store file, if any, is left on disk (it is the
+        durable tier; delete it through the filesystem if truly unwanted).
         """
         handle = self._cache.get(key)
         if handle is None:
@@ -130,12 +360,29 @@ class TensorRegistry:
         del self._cache[key]
         return True
 
+    def _require(self, key: str) -> TensorHandle:
+        handle = self._cache.get(key)
+        if handle is None:
+            raise KeyError(f"unknown tensor key {key!r}")
+        return handle
+
     def __len__(self) -> int:
         return len(self._cache)
 
     def host_bytes(self) -> int:
-        """Host-resident bytes of all cached prepared chunks."""
+        """Host-resident tensor bytes across all cached handles.
+
+        Counts the BLCO's per-element footprint (hi + lo + vals + bases
+        words) for resident handles; spilled stubs count 0 — their bytes
+        live on disk.  Padded launch chunks are no longer materialized up
+        front (``LaunchChunks`` pads lazily), so they do not appear here.
+        """
+        return sum(h.host_bytes for h in self._cache.values())
+
+    def store_bytes(self) -> int:
+        """Bytes of this registry's handles resident in the disk tier."""
         total = 0
         for h in self._cache.values():
-            total += h.spec.bytes_per_launch * len(h.chunks)
+            if h.store_path is not None and os.path.exists(h.store_path):
+                total += os.path.getsize(h.store_path)
         return total

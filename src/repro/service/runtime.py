@@ -226,6 +226,21 @@ class ServiceRuntime:
             self._work.notify_all()
             return update
 
+    # --------------------------------------------------------- persistence
+    def snapshot(self, path: str) -> dict:
+        """Snapshot the service at a quantum boundary (lock held, so no
+        sweep is mid-flight: every checkpointed ``CPState`` is a complete
+        ALS iteration a restarted service can resume from)."""
+        with self._lock:
+            return self.service.snapshot(path)
+
+    @classmethod
+    def restore(cls, path: str, **service_kwargs) -> "ServiceRuntime":
+        """A (not yet started) runtime over a service restored from
+        ``path`` — every snapshotted job re-enters admission under its
+        original id with its checkpointed state."""
+        return cls(DecompositionService.restore(path, **service_kwargs))
+
     # -------------------------------------------------------------- status
     def status(self, job_id: int) -> JobStatus:
         with self._lock:

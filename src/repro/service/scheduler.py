@@ -114,7 +114,14 @@ class JobScheduler:
     # ------------------------------------------------------------ lifecycle
     def submit(self, handle: TensorHandle, *, rank: int, iters: int = 25,
                tol: float = 1e-5, seed: int = 0, weight: float = 1.0,
-               tenant: str = "default") -> int:
+               tenant: str = "default", cp_state: CPState | None = None,
+               job_id: int | None = None) -> int:
+        """Enqueue a CP-ALS job; returns its id.
+
+        ``cp_state``/``job_id`` are the snapshot-restore hooks: a restored
+        job keeps its original id and resumes from its checkpointed sweep
+        instead of a fresh ``cp_als_init``.
+        """
         if not weight > 0:
             raise ValueError(f"tenant weight must be > 0, got {weight!r}")
         need = self.engine.min_cost(handle, rank)
@@ -123,10 +130,14 @@ class JobScheduler:
                 f"job needs at least {need} B of device memory in its "
                 f"cheapest regime, which exceeds the device budget "
                 f"({self.device_budget_bytes} B): it can never be admitted")
-        job = Job(job_id=self._next_id, handle=handle, rank=rank,
+        if job_id is None:
+            job_id = self._next_id
+        elif job_id in self.jobs:
+            raise ValueError(f"job id {job_id} already exists")
+        self._next_id = max(self._next_id, job_id + 1)
+        job = Job(job_id=job_id, handle=handle, rank=rank,
                   iters=iters, tol=tol, seed=seed, weight=float(weight),
-                  tenant=tenant)
-        self._next_id += 1
+                  tenant=tenant, cp=cp_state)
         self.jobs[job.job_id] = job
         self.pending.append(job.job_id)
         self.metrics.jobs_submitted += 1
@@ -157,9 +168,10 @@ class JobScheduler:
             job.metrics.admitted_s = time.perf_counter()
             job.metrics.backend = plan.backend
             job.metrics.stats = plan.stats()
-            job.cp = cp_als_init(job.handle.dims, job.rank,
-                                 norm_x=job.handle.norm_x, tol=job.tol,
-                                 seed=job.seed)
+            if job.cp is None:          # restored jobs carry their CPState
+                job.cp = cp_als_init(job.handle.dims, job.rank,
+                                     norm_x=job.handle.norm_x, tol=job.tol,
+                                     seed=job.seed)
             self.active.append(job.job_id)
             self.metrics.jobs_admitted += 1
             self._publish(job, "admitted")
@@ -180,6 +192,8 @@ class JobScheduler:
         else:
             self.metrics.jobs_completed += 1
         self.metrics.h2d_bytes_total += job.metrics.stats.h2d_bytes
+        self.metrics.disk_bytes_total += job.metrics.stats.disk_bytes
+        self.metrics.disk_time_s_total += job.metrics.stats.disk_time_s
         self.metrics.launches_total += job.metrics.stats.launches
         self._publish(job, state)
         self._admit()

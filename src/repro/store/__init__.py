@@ -1,0 +1,31 @@
+"""Persistent BLCO tensor store: disk tier of the memory hierarchy.
+
+The paper streams BLCO launches host -> device through fixed reservations;
+this package extends the same design one tier down (device ⊂ host ⊂ disk):
+
+    format    versioned, checksummed ``.blco`` file layout; launches are
+              stored reservation-padded so reads are zero-copy np.memmap
+              slices (``save_blco`` / ``open_blco`` / ``StoredBLCO``)
+    plan      ``DiskStreamedPlan`` — the fifth ExecutionPlan backend,
+              feeding the H2D queue straight from mmap'd chunks with a
+              bounded host window
+    snapshot  service persistence: registry contents + per-job ``CPState``
+              survive a process restart (``snapshot_service`` /
+              ``restore_service``)
+
+The service's ``TensorRegistry`` uses the store as its spill tier: LRU
+eviction writes the BLCO here instead of discarding it, and fingerprints
+make reloads restart-safe.
+"""
+from .format import (SECTION_ALIGN, VERSION, DiskChunkSource, StoredBLCO,
+                     StoreCorruptionError, StoreError, StoreFormatError,
+                     open_blco, save_blco)
+from .plan import DiskStreamedPlan
+from .snapshot import restore_service, snapshot_service
+
+__all__ = [
+    "SECTION_ALIGN", "VERSION", "DiskChunkSource", "StoredBLCO",
+    "StoreCorruptionError", "StoreError", "StoreFormatError",
+    "open_blco", "save_blco", "DiskStreamedPlan",
+    "snapshot_service", "restore_service",
+]

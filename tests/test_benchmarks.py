@@ -69,6 +69,44 @@ def test_bench_multitenant_json_schema(tmp_path):
     assert any(name.startswith("service4.") for name, _, _ in rows)
 
 
+def test_bench_oom_json_schema(tmp_path):
+    """The memory-hierarchy bench writes its store to the given dir and
+    emits bit-identical per-tier timings + the bounded-window ratio."""
+    path = tmp_path / "BENCH_5.json"
+    store = tmp_path / "store"
+    store.mkdir()
+    rows = []
+    payload = bench.bench_oom(rows, fast=True, json_path=str(path),
+                              store_dir=str(store))
+    on_disk = json.loads(path.read_text())
+    assert on_disk == payload
+    assert payload["bench"] == "memory_hierarchy_mttkrp"
+    assert (store / "bench_oom.blco").exists()   # smoke-run on a real store
+    for tier in ("in_memory", "host_streamed", "disk_streamed"):
+        assert payload["us_per_call"][tier] > 0, tier
+        assert payload["gb_per_s"][tier] > 0, tier
+    assert payload["store_file_bytes"] > 0
+    # the lazy/bounded window is strictly smaller than the old eager
+    # all-launches-resident footprint (the satellite regression, measured)
+    assert payload["host_window_bytes"] \
+        < payload["all_launches_padded_bytes"]
+    assert 0 < payload["host_window_ratio_vs_all_launches"] < 1
+    d = payload["disk_stats"]
+    assert d["disk_bytes"] > 0 and d["backend"] == "disk_streamed"
+    assert any(name.startswith("bench5.") for name, _, _ in rows)
+
+
+def test_committed_bench5_memory_hierarchy():
+    """The committed memory-hierarchy trajectory must show all three tiers
+    measured and a genuinely bounded disk-streaming host window."""
+    path = os.path.join(REPO, "BENCH_5.json")
+    assert os.path.exists(path), "BENCH_5.json must be committed"
+    payload = json.loads(open(path).read())
+    for tier in ("in_memory", "host_streamed", "disk_streamed"):
+        assert payload["gb_per_s"][tier] > 0, tier
+    assert payload["host_window_ratio_vs_all_launches"] < 0.5
+
+
 def test_committed_bench4_weighted_shares():
     """The committed multi-tenant trajectory must hold the 10% share bound
     and show a real cancellation release."""

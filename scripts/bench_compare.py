@@ -1,0 +1,189 @@
+#!/usr/bin/env python
+"""Perf-regression gate: diff fresh BENCH_*.json against the committed ones.
+
+Compares a fresh benchmark run (e.g. ``benchmarks/run.py --fast`` into a
+scratch directory) against the benchmark JSON files committed at the repo
+root, and fails when the geometric-mean slowdown across comparable timing
+metrics exceeds the threshold (default 20%).
+
+Only **config-comparable** metrics are diffed: a metric pair is compared
+iff the two payloads agree on every configuration key they both carry
+(``rank``, ``tensor``, ``block_budget_nnz``, ``queues``, ``sweeps``,
+``fast_mode``) — the committed files are full-mode runs, so a ``--fast``
+CI run skips the benches whose fast config differs (different tensor or
+rank) and says so, rather than comparing apples to oranges.  BENCH_3 is
+additionally diffed per-suite, so the fig8-suite overlap between fast and
+full modes still gates even though the suite lists differ.
+
+Exit status: 0 = within threshold (or nothing comparable), 1 = regression
+over threshold, 2 = usage/IO error.  ``--report json`` prints a
+machine-readable verdict for CI artifacts.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import sys
+
+DEFAULT_BENCHES = ("BENCH_3.json", "BENCH_4.json", "BENCH_5.json",
+                   "BENCH_6.json")
+
+# payload keys that must agree for two runs to be timing-comparable
+CONFIG_KEYS = ("bench", "rank", "tensor", "block_budget_nnz", "queues",
+               "sweeps", "fast_mode")
+
+
+def _config_mismatch(old: dict, new: dict) -> list:
+    """Config keys present in both payloads with differing values."""
+    return [k for k in CONFIG_KEYS
+            if k in old and k in new and old[k] != new[k]]
+
+
+def _suite_metrics(old: dict, new: dict):
+    """BENCH_3 per-suite timings over the suites both runs measured."""
+    out = {}
+    shared = set(old.get("suites", {})) & set(new.get("suites", {}))
+    for name in sorted(shared):
+        o, n = old["suites"][name], new["suites"][name]
+        for key in ("per_launch_loop_us", "cached_scan_xla_us"):
+            if key in o and key in n:
+                out[f"{name}.{key}"] = (o[key], n[key], "lower")
+    return out
+
+
+def _flat_metrics(old: dict, new: dict):
+    """Timing metrics shared by the generic payload shapes."""
+    out = {}
+    for key, direction in (("iterations_per_sec_total", "higher"),
+                           ("in_memory_us_tracing_off", "lower"),
+                           ("traced_wall_s", "lower"),
+                           ("store_write_s", "lower")):
+        if key in old and key in new:
+            out[key] = (old[key], new[key], direction)
+    for key in ("us_per_call",):                      # BENCH_5 tier timings
+        if isinstance(old.get(key), dict) and isinstance(new.get(key), dict):
+            for tier in sorted(set(old[key]) & set(new[key])):
+                out[f"{key}.{tier}"] = (old[key][tier], new[key][tier],
+                                        "lower")
+    return out
+
+
+def compare_pair(old: dict, new: dict) -> dict:
+    """Diff one committed/fresh payload pair; returns a verdict record."""
+    mismatch = _config_mismatch(old, new)
+    metrics = dict(_suite_metrics(old, new))
+    if not mismatch:
+        metrics.update(_flat_metrics(old, new))
+    ratios = {}
+    for name, (o, n, direction) in metrics.items():
+        if not (o > 0 and n > 0):
+            continue
+        # ratio > 1 always means "fresh run is worse"
+        ratios[name] = (n / o) if direction == "lower" else (o / n)
+    record = {
+        "bench": new.get("bench", "?"),
+        "config_mismatch": mismatch,
+        "compared_metrics": len(ratios),
+        "ratios": ratios,
+    }
+    if ratios:
+        record["geomean_ratio"] = math.exp(
+            sum(math.log(r) for r in ratios.values()) / len(ratios))
+        worst = max(ratios, key=ratios.get)
+        record["worst_metric"] = worst
+        record["worst_ratio"] = ratios[worst]
+    return record
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--fresh-dir", required=True, metavar="DIR",
+                    help="directory holding the freshly generated "
+                         "BENCH_*.json files")
+    ap.add_argument("--committed-dir", default=".", metavar="DIR",
+                    help="directory holding the committed baselines "
+                         "(default: repo root)")
+    ap.add_argument("--benches", nargs="*", default=list(DEFAULT_BENCHES),
+                    metavar="FILE", help="benchmark JSON filenames to diff")
+    ap.add_argument("--threshold", type=float, default=0.20, metavar="FRAC",
+                    help="maximum tolerated geomean slowdown "
+                         "(default: 0.20 = 20%%)")
+    ap.add_argument("--report", choices=("text", "json"), default="text")
+    args = ap.parse_args(argv)
+
+    records, all_ratios, skipped = [], {}, []
+    for fname in args.benches:
+        old_path = os.path.join(args.committed_dir, fname)
+        new_path = os.path.join(args.fresh_dir, fname)
+        if not os.path.exists(old_path):
+            skipped.append((fname, "no committed baseline"))
+            continue
+        if not os.path.exists(new_path):
+            skipped.append((fname, "missing from fresh run"))
+            continue
+        try:
+            with open(old_path) as f:
+                old = json.load(f)
+            with open(new_path) as f:
+                new = json.load(f)
+        except (OSError, json.JSONDecodeError) as exc:
+            print(f"bench_compare: cannot read {fname}: {exc}",
+                  file=sys.stderr)
+            return 2
+        rec = compare_pair(old, new)
+        rec["file"] = fname
+        records.append(rec)
+        if rec["config_mismatch"]:
+            skipped.append((fname, "config mismatch: "
+                            + ",".join(rec["config_mismatch"])))
+        for name, r in rec["ratios"].items():
+            all_ratios[f"{fname}:{name}"] = r
+
+    verdict = {
+        "threshold": args.threshold,
+        "compared_metrics": len(all_ratios),
+        "skipped": [{"file": f, "reason": r} for f, r in skipped],
+        "per_bench": records,
+    }
+    if all_ratios:
+        geo = math.exp(sum(math.log(r) for r in all_ratios.values())
+                       / len(all_ratios))
+        worst = max(all_ratios, key=all_ratios.get)
+        verdict.update(geomean_ratio=geo, worst_metric=worst,
+                       worst_ratio=all_ratios[worst])
+        verdict["regressed"] = geo > 1.0 + args.threshold
+    else:
+        verdict.update(geomean_ratio=None, regressed=False)
+
+    if args.report == "json":
+        json.dump(verdict, sys.stdout, indent=2, sort_keys=True)
+        print()
+    else:
+        for fname, reason in skipped:
+            print(f"bench_compare: SKIP {fname} ({reason})")
+        for rec in records:
+            if rec["ratios"]:
+                print(f"bench_compare: {rec['file']} "
+                      f"geomean {rec['geomean_ratio']:.3f}x "
+                      f"worst {rec['worst_metric']} "
+                      f"{rec['worst_ratio']:.3f}x "
+                      f"({rec['compared_metrics']} metrics)")
+        if verdict["geomean_ratio"] is None:
+            print("bench_compare: nothing comparable "
+                  "(config-mismatched fast run vs full baselines is "
+                  "expected when suites do not overlap)")
+        else:
+            state = "REGRESSED" if verdict["regressed"] else "OK"
+            print(f"bench_compare: {state} — overall geomean "
+                  f"{verdict['geomean_ratio']:.3f}x over "
+                  f"{len(all_ratios)} metrics "
+                  f"(threshold {1 + args.threshold:.2f}x)")
+    return 1 if verdict["regressed"] else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -18,4 +18,28 @@ fi
 echo "== service smoke (examples/serve_td.py) =="
 python examples/serve_td.py
 
+# Perf-regression gate (non-blocking here; CI runs the blocking variant):
+# a fresh fast benchmark run diffed against the committed BENCH_*.json.
+# CI sets REPRO_SKIP_BENCH_COMPARE=1 because it runs its own blocking
+# compare on the same fast run right after check.sh.
+if [[ "${REPRO_SKIP_BENCH_COMPARE:-}" == "1" ]]; then
+    echo "== bench compare skipped (REPRO_SKIP_BENCH_COMPARE=1) =="
+    echo "ALL CHECKS PASSED"
+    exit 0
+fi
+echo "== bench compare (non-blocking) =="
+FRESH_DIR=$(mktemp -d)
+if python benchmarks/run.py --fast \
+        --json "$FRESH_DIR/BENCH_3.json" \
+        --mt-json "$FRESH_DIR/BENCH_4.json" \
+        --oom-json "$FRESH_DIR/BENCH_5.json" \
+        --obs-json "$FRESH_DIR/BENCH_6.json" \
+        --trace-json "$FRESH_DIR/TRACE_6.json" > "$FRESH_DIR/bench.log" 2>&1
+then
+    python scripts/bench_compare.py --fresh-dir "$FRESH_DIR" \
+        || echo "bench_compare: regression reported (non-blocking in check.sh)"
+else
+    echo "bench_compare: fast benchmark run failed (non-blocking); see $FRESH_DIR/bench.log"
+fi
+
 echo "ALL CHECKS PASSED"

@@ -27,6 +27,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import trace as obs_trace
+
 from .blco import BLCOTensor
 from .counters import record_dispatch
 from .mttkrp import (DEFAULT_COPIES, choose_resolution, launch_mttkrp_impl)
@@ -177,10 +179,14 @@ class LaunchCache:
             return jnp.zeros((self.dims[mode], rank),
                              jnp.result_type(self.vals, factors[0]))
         record_dispatch()
-        return stacked_mttkrp(
-            self.hi, self.lo, self.vals, self.bases, factors,
-            re_fields=self.re_fields, re_shifts=self.re_shifts, mode=mode,
-            out_rows=self.dims[mode], resolution=resolution, copies=copies)
+        # span covers the host-side issue of the one scan dispatch (async);
+        # the fenced device time is the plan's device.fence event
+        with obs_trace.span("launch_cache.scan", "dispatch",
+                            launches=self.num_launches, mode=mode):
+            return stacked_mttkrp(
+                self.hi, self.lo, self.vals, self.bases, factors,
+                re_fields=self.re_fields, re_shifts=self.re_shifts, mode=mode,
+                out_rows=self.dims[mode], resolution=resolution, copies=copies)
 
     # ---------------------------------------------------------------- release
     def delete(self) -> None:

@@ -38,6 +38,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import trace as obs_trace
+from repro.obs.hist import EngineHists
+
 from .blco import BLCOTensor
 from .counters import record_dispatch
 from .mttkrp import launch_mttkrp, choose_resolution, DEFAULT_COPIES
@@ -54,6 +57,12 @@ class EngineStats:
     dispatch of a call until ``block_until_ready()`` returns, i.e. it includes
     the actual device execution.  ``compute_time_s`` is kept as a deprecated
     read-only alias of ``device_time_s`` for pre-engine callers.
+
+    ``hist`` keeps the per-event *distributions* behind the scalar totals
+    (per-launch dispatch latency, per-chunk H2D and disk-fetch times,
+    per-launch nnz — see :class:`repro.obs.hist.EngineHists`): the scalar
+    sums equal the corresponding histogram sums by construction, the
+    scalars stay for snapshot compatibility.
     """
     backend: str = ""
     mttkrp_calls: int = 0
@@ -65,6 +74,7 @@ class EngineStats:
     dispatch_time_s: float = 0.0
     device_time_s: float = 0.0
     total_time_s: float = 0.0
+    hist: EngineHists = dataclasses.field(default_factory=EngineHists)
 
     @property
     def compute_time_s(self) -> float:
@@ -82,6 +92,7 @@ class EngineStats:
             "dispatch_time_s": self.dispatch_time_s,
             "device_time_s": self.device_time_s,
             "total_time_s": self.total_time_s,
+            "hist": self.hist.snapshot(),
         }
 
 
@@ -222,16 +233,22 @@ def stream_mttkrp(chunks, blco: BLCOTensor, factors, mode: int, *,
         hi, lo, vals, bases, n = chunk
         dev = (jax.device_put(hi), jax.device_put(lo),
                jax.device_put(vals), jax.device_put(bases))
-        stats.put_time_s += time.perf_counter() - t0
-        stats.h2d_bytes += hi.nbytes + lo.nbytes + vals.nbytes + bases.nbytes
-        return dev
+        t1 = time.perf_counter()
+        nbytes = hi.nbytes + lo.nbytes + vals.nbytes + bases.nbytes
+        stats.put_time_s += t1 - t0
+        stats.h2d_bytes += nbytes
+        stats.hist.put_chunk_s.record(t1 - t0)
+        stats.hist.launch_nnz.record(n)
+        if obs_trace.TRACING.enabled:
+            obs_trace.add_event("h2d.put", "h2d", t0, t1, bytes=nbytes, nnz=n)
+        return dev, n
 
-    def _consume(dev):
+    def _consume(item):
         nonlocal out, t_first_dispatch
+        (hi, lo, vals, bases), n = item
         t0 = time.perf_counter()
         if t_first_dispatch is None:
             t_first_dispatch = t0
-        hi, lo, vals, bases = dev
         if kernel == "pallas":
             # fused_mttkrp_flat records its own dispatch
             out = out + fused_mttkrp_flat(
@@ -247,8 +264,12 @@ def stream_mttkrp(chunks, blco: BLCOTensor, factors, mode: int, *,
                 mode=mode, out_rows=b.dims[mode],
                 resolution=resolution, copies=copies)
         # host wall time of the (async) dispatch only — NOT device compute
-        stats.dispatch_time_s += time.perf_counter() - t0
+        t1 = time.perf_counter()
+        stats.dispatch_time_s += t1 - t0
+        stats.hist.dispatch_s.record(t1 - t0)
         stats.launches += 1
+        if obs_trace.TRACING.enabled:
+            obs_trace.add_event("dispatch.launch", "dispatch", t0, t1, nnz=n)
 
     for chunk in chunks:
         # keep up to `queues` transfers in flight ahead of compute
@@ -262,6 +283,10 @@ def stream_mttkrp(chunks, blco: BLCOTensor, factors, mode: int, *,
     if t_first_dispatch is not None:
         # fenced: first dispatch -> all launches retired on device
         stats.device_time_s += t_end - t_first_dispatch
+        if obs_trace.TRACING.enabled:
+            obs_trace.add_event("device.fence", "device",
+                                t_first_dispatch, t_end,
+                                launches=stats.launches)
     stats.mttkrp_calls += 1
     stats.total_time_s += t_end - t_start
     return out

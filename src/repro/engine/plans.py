@@ -24,6 +24,7 @@ import numpy as np
 
 from repro.core import baselines
 from repro.core.blco import BLCOTensor, decode_coords
+from repro.obs import trace as obs_trace
 from repro.core.mttkrp import DEFAULT_COPIES, DeviceBLCO, validate_kernel
 from repro.core.streaming import (EngineStats, LaunchChunks, ReservationSpec,
                                   reservation_for, stream_mttkrp)
@@ -66,20 +67,28 @@ class InMemoryPlan:
                copies: int | None = None):
         if self._dev is None:
             raise RuntimeError("plan is closed")
-        t0 = time.perf_counter()
-        out = self._dev.mttkrp(
-            factors, mode, kernel=self.kernel,
-            resolution=resolution if resolution is not None else self.resolution,
-            copies=copies if copies is not None else self.copies)
-        # host wall time of the (async) dispatch vs the fenced device span
-        self._stats.dispatch_time_s += time.perf_counter() - t0
-        if hasattr(out, "block_until_ready"):
-            out.block_until_ready()
-        dt = time.perf_counter() - t0
-        self._stats.device_time_s += dt
-        self._stats.total_time_s += dt
-        self._stats.mttkrp_calls += 1
-        self._stats.launches += 1            # one fused dispatch per call
+        with obs_trace.span("plan.mttkrp", "plan", backend=self.backend,
+                            mode=mode):
+            t0 = time.perf_counter()
+            out = self._dev.mttkrp(
+                factors, mode, kernel=self.kernel,
+                resolution=resolution if resolution is not None
+                else self.resolution,
+                copies=copies if copies is not None else self.copies)
+            # host wall time of the (async) dispatch vs the fenced device span
+            t1 = time.perf_counter()
+            self._stats.dispatch_time_s += t1 - t0
+            self._stats.hist.dispatch_s.record(t1 - t0)
+            if hasattr(out, "block_until_ready"):
+                out.block_until_ready()
+            t2 = time.perf_counter()
+            self._stats.device_time_s += t2 - t0
+            self._stats.total_time_s += t2 - t0
+            self._stats.mttkrp_calls += 1
+            self._stats.launches += 1        # one fused dispatch per call
+            if obs_trace.TRACING.enabled:
+                obs_trace.add_event("device.fence", "device", t0, t2,
+                                    backend=self.backend)
         return out
 
     def device_bytes(self) -> int:
@@ -131,11 +140,15 @@ class StreamedPlan:
                copies: int | None = None):
         if self._closed:
             raise RuntimeError("plan is closed")
-        return stream_mttkrp(
-            self._chunks, self.blco, factors, mode, queues=self.queues,
-            resolution=resolution if resolution is not None else self.resolution,
-            copies=copies if copies is not None else self.copies,
-            stats=self._stats, kernel=self.kernel, interpret=self.interpret)
+        with obs_trace.span("plan.mttkrp", "plan", backend=self.backend,
+                            mode=mode):
+            return stream_mttkrp(
+                self._chunks, self.blco, factors, mode, queues=self.queues,
+                resolution=resolution if resolution is not None
+                else self.resolution,
+                copies=copies if copies is not None else self.copies,
+                stats=self._stats, kernel=self.kernel,
+                interpret=self.interpret)
 
     def device_bytes(self) -> int:
         """Reservation bytes in flight (the only device-resident state)."""

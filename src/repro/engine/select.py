@@ -31,6 +31,7 @@ from repro.core.blco import BLCOTensor, format_bytes
 from repro.core.mttkrp import DEFAULT_COPIES, validate_kernel
 from repro.core.streaming import reservation_for
 from repro.dist.context import get_mesh
+from repro.obs import trace as obs_trace
 
 from .api import factor_bytes, in_memory_bytes
 from .plans import (BASELINE_KINDS, BaselinePlan, InMemoryPlan, ShardedPlan,
@@ -64,6 +65,24 @@ def plan_for(blco: BLCOTensor, device_budget_bytes: int, *, rank: int,
     O(queues x reservation) host window.  Raises ValueError when no
     regime fits the budget.
     """
+    with obs_trace.span("engine.plan_for", "plan", nnz=blco.nnz,
+                        requested=backend) as sp:
+        plan = _plan_for_impl(
+            blco, device_budget_bytes, rank=rank, dtype=dtype,
+            backend=backend, mesh=mesh, queues=queues,
+            reservation_nnz=reservation_nnz, tensor=tensor,
+            resolution=resolution, copies=copies, kernel=kernel,
+            interpret=interpret, host_budget_bytes=host_budget_bytes,
+            store_path=store_path)
+        sp.set(backend=plan.backend)
+        return plan
+
+
+def _plan_for_impl(blco: BLCOTensor, device_budget_bytes: int, *, rank: int,
+                   dtype, backend: str, mesh, queues: int,
+                   reservation_nnz: int | None, tensor, resolution: str,
+                   copies: int, kernel: str, interpret: bool,
+                   host_budget_bytes: int | None, store_path: str | None):
     if backend not in AUTO_BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; "
                          f"expected one of {AUTO_BACKENDS}")

@@ -1,0 +1,37 @@
+"""Observability: span tracing, log2 histograms, Perfetto/Prometheus export.
+
+The cross-cutting layer every perf claim in this repo is measured
+through.  Three small modules, zero hard dependencies beyond the stdlib:
+
+    trace    context-manager spans + already-measured events into a
+             thread-safe bounded ring buffer; zero-cost when disabled
+             (one module-level flag check, no allocation)
+    hist     fixed log2-bucket histograms (dispatch latency, H2D chunk
+             time, disk read time, queue wait, per-launch nnz) threaded
+             through ``EngineStats`` / ``JobMetrics`` / ``ServiceMetrics``
+    export   Chrome trace-event JSON (one track per pipeline stage —
+             load it in Perfetto to *see* H2D/compute overlap) and
+             Prometheus text exposition (``render_prometheus``)
+
+Quick use::
+
+    from repro import obs
+    obs.enable()                       # or: with obs.trace.enabled(): ...
+    ... run a plan / service ...
+    obs.write_chrome_trace("trace.json")
+    print(obs.render_prometheus(service.metrics))
+"""
+from . import trace
+from .export import (chrome_trace, render_prometheus, track_totals,
+                     write_chrome_trace)
+from .hist import EngineHists, Hist, ServiceHists
+from .trace import (TRACING, add_event, clear, disable, drain, enable,
+                    is_enabled, span, spans)
+
+__all__ = [
+    "trace", "TRACING", "span", "add_event", "enable", "disable",
+    "is_enabled", "clear", "spans", "drain",
+    "Hist", "EngineHists", "ServiceHists",
+    "chrome_trace", "write_chrome_trace", "track_totals",
+    "render_prometheus",
+]

@@ -1,0 +1,182 @@
+"""Exporters: Chrome trace-event JSON (Perfetto) + Prometheus text.
+
+* :func:`chrome_trace` turns recorded spans into the Chrome trace-event
+  format (https://ui.perfetto.dev loads it directly).  Each pipeline
+  stage gets its own named track (``store`` / ``h2d`` / ``dispatch`` /
+  ``device`` / ``scheduler`` / ...), so H2D-vs-compute overlap in the
+  streamed regimes is visually inspectable: a healthy pipeline shows the
+  ``h2d`` track's puts running *under* the ``device`` track's fenced
+  span, a serialized one shows them alternating.
+
+* :func:`render_prometheus` renders a ``ServiceMetrics`` in the
+  Prometheus text exposition format (v0.0.4): counters and gauges become
+  ``repro_*`` samples, per-tenant iteration counts become a labelled
+  counter, and every :class:`~repro.obs.hist.Hist` becomes a native
+  Prometheus histogram (cumulative ``_bucket{le=...}`` + ``_sum`` +
+  ``_count``) — scrapeable by an off-the-shelf Prometheus without any
+  adapter.
+"""
+from __future__ import annotations
+
+import json
+import math
+
+from . import trace as _trace
+
+# Stable track ordering for the Perfetto view: pipeline order, top-down.
+_TRACK_ORDER = ("scheduler", "plan", "store", "h2d", "dispatch", "device",
+                "registry", "main")
+
+
+def _json_safe(v):
+    if isinstance(v, (bool, int, str)) or v is None:
+        return v
+    if isinstance(v, float):
+        return v if math.isfinite(v) else repr(v)
+    return repr(v)
+
+
+def chrome_trace(spans=None) -> dict:
+    """Chrome trace-event JSON dict of ``spans`` (default: the ring buffer).
+
+    One track (= trace "thread") per pipeline stage, named via metadata
+    events; spans become complete ("X") events with microsecond
+    timestamps relative to the tracer epoch and their attributes under
+    ``args``.
+    """
+    if spans is None:
+        spans = _trace.spans()
+    epoch = _trace.TRACING.epoch_s
+    tracks: dict[str, int] = {}
+
+    def tid(track: str) -> int:
+        if track not in tracks:
+            # deterministic ids: known pipeline stages first, then arrival
+            if track in _TRACK_ORDER:
+                tracks[track] = _TRACK_ORDER.index(track) + 1
+            else:
+                tracks[track] = len(_TRACK_ORDER) + 1 + len(
+                    [t for t in tracks if t not in _TRACK_ORDER])
+        return tracks[track]
+
+    events = []
+    for s in spans:
+        ev = {
+            "ph": "X",
+            "name": s.name,
+            "cat": s.track,
+            "pid": 1,
+            "tid": tid(s.track),
+            "ts": (s.start_s - epoch) * 1e6,
+            "dur": s.duration_s * 1e6,
+        }
+        args = {k: _json_safe(v) for k, v in s.attrs.items()}
+        if s.parent is not None:
+            args["parent"] = s.parent
+        if args:
+            ev["args"] = args
+        events.append(ev)
+
+    meta = [{"ph": "M", "pid": 1, "tid": 0, "name": "process_name",
+             "args": {"name": "repro-blco"}}]
+    for track, t in sorted(tracks.items(), key=lambda kv: kv[1]):
+        meta.append({"ph": "M", "pid": 1, "tid": t, "name": "thread_name",
+                     "args": {"name": track}})
+        meta.append({"ph": "M", "pid": 1, "tid": t,
+                     "name": "thread_sort_index",
+                     "args": {"sort_index": t}})
+    return {"traceEvents": meta + events, "displayTimeUnit": "ms",
+            "otherData": {"dropped_spans": _trace.TRACING.dropped}}
+
+
+def write_chrome_trace(path: str, spans=None) -> dict:
+    """Write :func:`chrome_trace` to ``path``; returns the trace dict."""
+    doc = chrome_trace(spans)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return doc
+
+
+def track_totals(spans=None) -> dict:
+    """Summed span duration (seconds) per track — the cross-check against
+    ``EngineStats``/histogram totals (span sums must agree with the stats
+    the same timestamps fed)."""
+    if spans is None:
+        spans = _trace.spans()
+    totals: dict[str, float] = {}
+    for s in spans:
+        totals[s.track] = totals.get(s.track, 0.0) + s.duration_s
+    return totals
+
+
+# ----------------------------------------------------------------- prometheus
+def _prom_num(v) -> str:
+    if isinstance(v, float) and math.isinf(v):
+        return "+Inf" if v > 0 else "-Inf"
+    return repr(float(v)) if isinstance(v, float) else str(int(v))
+
+
+def _prom_hist(name: str, hist, help_text: str, out: list) -> None:
+    out.append(f"# HELP {name} {help_text}")
+    out.append(f"# TYPE {name} histogram")
+    for le, cum in hist.cumulative():
+        out.append(f'{name}_bucket{{le="{_prom_num(le)}"}} {cum}')
+    out.append(f"{name}_sum {_prom_num(hist.sum)}")
+    out.append(f"{name}_count {hist.count}")
+
+
+_COUNTER_KEYS = (
+    "jobs_submitted", "jobs_admitted", "jobs_completed", "jobs_failed",
+    "jobs_cancelled", "preemptions", "cancel_freed_bytes_total",
+    "blco_cache_hits", "blco_cache_misses", "blco_disk_hits",
+    "spills", "spill_bytes_total", "loads", "jobs_restored",
+    "iterations_total", "h2d_bytes_total", "disk_bytes_total",
+    "disk_time_s_total", "launches_total",
+)
+
+_GAUGE_KEYS = (
+    "queue_depth", "running_jobs", "host_budget_used_bytes",
+    "admitted_reservation_bytes", "peak_admitted_reservation_bytes",
+    "uptime_s", "busy_time_s",
+)
+
+_HIST_HELP = {
+    "queue_wait_s": "Job wait from submission to admission (seconds)",
+    "quantum_s": "Scheduler quantum duration: one ALS sweep (seconds)",
+    "dispatch_s": "Per-launch host dispatch latency (seconds)",
+    "put_chunk_s": "Per-chunk H2D transfer issue time (seconds)",
+    "disk_read_s": "Per-chunk store fetch time (seconds)",
+    "launch_nnz": "True nnz per executed launch",
+}
+
+
+def render_prometheus(metrics, *, prefix: str = "repro") -> str:
+    """Prometheus text exposition of a ``ServiceMetrics``.
+
+    ``metrics`` is the live ``ServiceMetrics`` object (histograms need
+    their bucket arrays, which the JSON ``snapshot()`` flattens).
+    """
+    out: list[str] = []
+    for key in _COUNTER_KEYS:
+        out.append(f"# TYPE {prefix}_{key} counter")
+        out.append(f"{prefix}_{key} {_prom_num(getattr(metrics, key))}")
+    out.append(f"# TYPE {prefix}_tenant_iterations_total counter")
+    for tenant, n in sorted(metrics.tenant_iterations.items()):
+        out.append(f'{prefix}_tenant_iterations_total'
+                   f'{{tenant="{tenant}"}} {n}')
+    for key in _GAUGE_KEYS:
+        value = getattr(metrics, key)
+        out.append(f"# TYPE {prefix}_{key} gauge")
+        out.append(f"{prefix}_{key} {_prom_num(value)}")
+    out.append(f"# TYPE {prefix}_iterations_per_busy_sec gauge")
+    out.append(f"{prefix}_iterations_per_busy_sec "
+               f"{_prom_num(metrics.iterations_per_sec())}")
+    for name, hist_obj in (("queue_wait_s", metrics.hist.queue_wait_s),
+                           ("quantum_s", metrics.hist.quantum_s),
+                           ("dispatch_s", metrics.hist.dispatch_s),
+                           ("put_chunk_s", metrics.hist.put_chunk_s),
+                           ("disk_read_s", metrics.hist.disk_read_s),
+                           ("launch_nnz", metrics.hist.launch_nnz)):
+        _prom_hist(f"{prefix}_{name}", hist_obj, _HIST_HELP[name], out)
+    return "\n".join(out) + "\n"

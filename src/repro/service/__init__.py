@@ -19,8 +19,9 @@ pooled reservations for large ones.
                and streaming per-iteration status feeds
 """
 from .api import (CancelJob, CancelResult, DecompositionResult,
-                  DecompositionService, JobStatus, MTTKRPQuery, SetWeight,
-                  SubmitDecomposition, WeightUpdate, DEFAULT_DEVICE_BUDGET)
+                  DecompositionService, GetMetrics, GetTrace, JobStatus,
+                  MTTKRPQuery, SetWeight, SubmitDecomposition, WeightUpdate,
+                  DEFAULT_DEVICE_BUDGET)
 from .executor import (PooledDiskStreamedPlan, PooledExecutor,
                        PooledInMemoryPlan, PooledStreamedPlan, ServiceEngine)
 from .metrics import JobMetrics, ServiceMetrics
@@ -31,8 +32,9 @@ from .scheduler import (Job, JobScheduler, QUEUED, RUNNING, DONE, FAILED,
 
 __all__ = [
     "CancelJob", "CancelResult", "DecompositionResult",
-    "DecompositionService", "JobStatus", "MTTKRPQuery", "SetWeight",
-    "SubmitDecomposition", "WeightUpdate", "DEFAULT_DEVICE_BUDGET",
+    "DecompositionService", "GetMetrics", "GetTrace", "JobStatus",
+    "MTTKRPQuery", "SetWeight", "SubmitDecomposition", "WeightUpdate",
+    "DEFAULT_DEVICE_BUDGET",
     "ServiceEngine", "PooledExecutor", "PooledInMemoryPlan",
     "PooledStreamedPlan", "PooledDiskStreamedPlan",
     "JobMetrics", "ServiceMetrics",

@@ -15,6 +15,8 @@ from typing import Any
 
 from repro.core.cp_als import CPResult
 from repro.core.tensor import SparseTensor
+from repro.obs import trace as obs_trace
+from repro.obs.export import chrome_trace, render_prometheus
 
 from . import scheduler as sched
 from .executor import ServiceEngine
@@ -83,6 +85,28 @@ class MTTKRPQuery:
     mode: int
     build: BuildParams = dataclasses.field(default_factory=BuildParams)
     reservation_nnz: int | None = None
+
+
+@dataclasses.dataclass
+class GetMetrics:
+    """Request: the service-wide metrics snapshot.
+
+    ``format="json"`` returns the ``ServiceMetrics.snapshot()`` dict;
+    ``format="prometheus"`` returns the text exposition
+    (:func:`repro.obs.export.render_prometheus`) an off-the-shelf
+    Prometheus can scrape.
+    """
+    format: str = "json"          # "json" | "prometheus"
+
+
+@dataclasses.dataclass
+class GetTrace:
+    """Request: the recorded span timeline as Chrome trace-event JSON.
+
+    ``drain=True`` removes the returned spans from the ring buffer, so
+    successive calls stream disjoint windows of the timeline.
+    """
+    drain: bool = False
 
 
 @dataclasses.dataclass
@@ -266,7 +290,32 @@ class DecompositionService:
             result=job.cp.as_result(), metrics=job.metrics.snapshot())
 
     def service_metrics(self) -> dict[str, Any]:
+        self._sync_cache_counters()
         return self.metrics.snapshot()
+
+    def get_metrics(self, req: GetMetrics | None = None):
+        """Service metrics in the requested format (see ``GetMetrics``)."""
+        req = req if req is not None else GetMetrics()
+        self._sync_cache_counters()
+        if req.format == "prometheus":
+            return render_prometheus(self.metrics)
+        if req.format == "json":
+            return self.metrics.snapshot()
+        raise ValueError(f"unknown metrics format {req.format!r}; "
+                         f"expected 'json' or 'prometheus'")
+
+    def trace(self, req: GetTrace | None = None) -> dict:
+        """Recorded spans as Chrome trace-event JSON (see ``GetTrace``).
+
+        Load the returned dict (or its ``json.dump``) in
+        https://ui.perfetto.dev to see the service's pipeline timeline —
+        one track per stage (scheduler / plan / store / h2d / dispatch /
+        device / registry).  Tracing must be enabled (``repro.obs.enable``
+        or ``ServiceRuntime(tracing=True)``) for spans to be recorded.
+        """
+        req = req if req is not None else GetTrace()
+        spans = obs_trace.drain() if req.drain else None
+        return chrome_trace(spans)
 
     # ------------------------------------------------------------ persistence
     def snapshot(self, path: str) -> dict:
@@ -297,3 +346,4 @@ class DecompositionService:
         self.metrics.spills = self.registry.spills
         self.metrics.spill_bytes_total = self.registry.spill_bytes
         self.metrics.loads = self.registry.loads
+        self.metrics.host_budget_used_bytes = self.registry.host_bytes()

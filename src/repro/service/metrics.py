@@ -4,6 +4,14 @@ Every admitted job references its plan's ``EngineStats`` (the unified
 engine counters: H2D bytes, launches, dispatch vs fenced device time), plus
 queue timestamps; the service aggregates across jobs and tracks the
 measured plan bytes the scheduler holds against the device budget.
+
+Beyond the scalar totals, ``ServiceMetrics`` carries a
+:class:`~repro.obs.hist.ServiceHists` bundle: scheduler distributions
+(queue wait, quantum duration) recorded live, and the engine
+distributions of retired jobs rolled up losslessly at retirement.
+Throughput is reported over **busy time** (the summed duration of
+executed scheduler quanta), not wall-clock since construction — an idle
+service does not decay its measured rate.
 """
 from __future__ import annotations
 
@@ -11,6 +19,7 @@ import dataclasses
 import time
 
 from repro.core.streaming import EngineStats
+from repro.obs.hist import ServiceHists
 
 
 @dataclasses.dataclass
@@ -59,6 +68,7 @@ class JobMetrics:
             "disk_time_s": self.stats.disk_time_s,
             "dispatch_time_s": self.stats.dispatch_time_s,
             "device_time_s": self.stats.device_time_s,
+            "hist": self.stats.hist.snapshot(),
         }
 
 
@@ -84,6 +94,13 @@ class ServiceMetrics:
     disk_bytes_total: int = 0            # store->host traffic of retired jobs
     disk_time_s_total: float = 0.0
     launches_total: int = 0
+    # summed duration of executed scheduler quanta — the throughput
+    # denominator (wall-clock minus idle/queue-empty time)
+    busy_time_s: float = 0.0
+    # live scheduler gauges, synced on every lifecycle edge
+    queue_depth: int = 0
+    running_jobs: int = 0
+    host_budget_used_bytes: int = 0      # registry host-tier residency
     # executed ALS sweeps per tenant: the observable the weighted fair
     # share is measured by (share_i ~ weight_i / sum(weights))
     tenant_iterations: dict = dataclasses.field(default_factory=dict)
@@ -91,6 +108,7 @@ class ServiceMetrics:
     # the engine API, when only reservations were charged; kept for compat)
     admitted_reservation_bytes: int = 0
     peak_admitted_reservation_bytes: int = 0
+    hist: ServiceHists = dataclasses.field(default_factory=ServiceHists)
 
     def hold_bytes(self, delta: int) -> None:
         self.admitted_reservation_bytes += delta
@@ -109,9 +127,23 @@ class ServiceMetrics:
             return {}
         return {t: n / total for t, n in self.tenant_iterations.items()}
 
+    @property
+    def uptime_s(self) -> float:
+        """Wall-clock seconds since the metrics object was constructed."""
+        return time.perf_counter() - self.started_s
+
     def iterations_per_sec(self) -> float:
-        dt = time.perf_counter() - self.started_s
-        return self.iterations_total / dt if dt > 0 else 0.0
+        """Executed ALS sweeps per second of *busy* time.
+
+        The denominator is the summed duration of executed scheduler
+        quanta, not wall-clock since construction, so the rate measures
+        the service's actual sweep throughput and does not decay while
+        the queue is empty.  (The old wall-clock version made an idle
+        service look progressively slower.)
+        """
+        if self.busy_time_s > 0:
+            return self.iterations_total / self.busy_time_s
+        return 0.0
 
     def snapshot(self) -> dict:
         return {
@@ -135,9 +167,15 @@ class ServiceMetrics:
             "disk_bytes_total": self.disk_bytes_total,
             "disk_time_s_total": self.disk_time_s_total,
             "launches_total": self.launches_total,
+            "busy_time_s": self.busy_time_s,
+            "uptime_s": self.uptime_s,
+            "queue_depth": self.queue_depth,
+            "running_jobs": self.running_jobs,
+            "host_budget_used_bytes": self.host_budget_used_bytes,
             "tenant_iterations": dict(self.tenant_iterations),
             "tenant_shares": self.tenant_shares(),
             "admitted_reservation_bytes": self.admitted_reservation_bytes,
             "peak_admitted_reservation_bytes":
                 self.peak_admitted_reservation_bytes,
+            "hist": self.hist.snapshot(),
         }

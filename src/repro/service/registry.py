@@ -33,6 +33,7 @@ from repro.core.blco import BLCOTensor, build_blco, format_bytes
 from repro.core.streaming import (LaunchChunks, ReservationSpec,
                                   reservation_for)
 from repro.core.tensor import SparseTensor
+from repro.obs import trace as obs_trace
 
 
 @dataclasses.dataclass(frozen=True)
@@ -268,12 +269,15 @@ class TensorRegistry:
             raise RuntimeError(
                 f"tensor {key} is pinned by {handle.pins} live plan(s); "
                 f"close them before spilling")
-        self.persist(key)
-        freed = handle.host_bytes
-        handle.blco = None
-        handle.chunks = None
-        self.spills += 1
-        self.spill_bytes += freed
+        with obs_trace.span("registry.spill", "registry", key=key,
+                            nnz=handle.nnz) as sp:
+            self.persist(key)
+            freed = handle.host_bytes
+            handle.blco = None
+            handle.chunks = None
+            self.spills += 1
+            self.spill_bytes += freed
+            sp.set(bytes=freed)
         return freed
 
     def maybe_load(self, key: str) -> TensorHandle:
@@ -307,9 +311,11 @@ class TensorRegistry:
         if handle.resident:
             return handle
         from repro.store import open_blco
-        with open_blco(handle.store_path) as stored:
-            handle.blco = stored.to_blco()
-        handle.chunks = LaunchChunks(handle.blco, handle.spec.nnz)
+        with obs_trace.span("registry.load", "registry", key=key,
+                            nnz=handle.nnz):
+            with open_blco(handle.store_path) as stored:
+                handle.blco = stored.to_blco()
+            handle.chunks = LaunchChunks(handle.blco, handle.spec.nnz)
         self.loads += 1
         self._touch(handle)               # the reload makes it MRU
         self._maybe_spill(keep=handle)

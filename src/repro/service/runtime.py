@@ -34,8 +34,8 @@ import time
 
 from . import scheduler as sched
 from .api import (CancelJob, CancelResult, DecompositionResult,
-                  DecompositionService, JobStatus, SetWeight,
-                  SubmitDecomposition, WeightUpdate)
+                  DecompositionService, GetMetrics, GetTrace, JobStatus,
+                  SetWeight, SubmitDecomposition, WeightUpdate)
 
 _IDLE_POLL_S = 0.05         # worker re-check period while the queue is empty
 _YIELD_S = 0.0005           # unlocked window between quanta (see _drive)
@@ -253,6 +253,21 @@ class ServiceRuntime:
     def service_metrics(self) -> dict:
         with self._lock:
             return self.service.service_metrics()
+
+    def get_metrics(self, req: GetMetrics | None = None):
+        """Service metrics (JSON dict or Prometheus text; see GetMetrics)."""
+        with self._lock:
+            return self.service.get_metrics(req)
+
+    def trace(self, req: GetTrace | None = None) -> dict:
+        """Recorded spans as Chrome trace-event JSON (see GetTrace).
+
+        Taken outside the runtime lock: the tracer's ring buffer has its
+        own lock, and the worker thread's spans are complete objects by
+        the time they are recorded, so a mid-sweep export never blocks on
+        (or is blocked by) an in-flight quantum.
+        """
+        return self.service.trace(req)
 
     def subscribe(self, job_id: int | None = None) -> StatusFeed:
         """A feed of subsequent events (all jobs, or one job).

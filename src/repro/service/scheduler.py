@@ -39,6 +39,7 @@ import time
 from typing import Callable
 
 from repro.core.cp_als import CPState, cp_als_init, cp_als_step
+from repro.obs import trace as obs_trace
 
 from .executor import ServiceEngine
 from .metrics import JobMetrics, ServiceMetrics
@@ -111,6 +112,11 @@ class JobScheduler:
         for fn in list(self.observers):
             fn(job, kind)
 
+    def _sync_gauges(self) -> None:
+        """Refresh the live scheduler gauges after a lifecycle edge."""
+        self.metrics.queue_depth = len(self.pending)
+        self.metrics.running_jobs = len(self.active)
+
     # ------------------------------------------------------------ lifecycle
     def submit(self, handle: TensorHandle, *, rank: int, iters: int = 25,
                tol: float = 1e-5, seed: int = 0, weight: float = 1.0,
@@ -141,6 +147,7 @@ class JobScheduler:
         self.jobs[job.job_id] = job
         self.pending.append(job.job_id)
         self.metrics.jobs_submitted += 1
+        self._sync_gauges()
         self._publish(job, QUEUED)
         self._admit()
         return job.job_id
@@ -168,12 +175,14 @@ class JobScheduler:
             job.metrics.admitted_s = time.perf_counter()
             job.metrics.backend = plan.backend
             job.metrics.stats = plan.stats()
+            self.metrics.hist.queue_wait_s.record(job.metrics.queue_wait_s)
             if job.cp is None:          # restored jobs carry their CPState
                 job.cp = cp_als_init(job.handle.dims, job.rank,
                                      norm_x=job.handle.norm_x, tol=job.tol,
                                      seed=job.seed)
             self.active.append(job.job_id)
             self.metrics.jobs_admitted += 1
+            self._sync_gauges()
             self._publish(job, "admitted")
 
     def _retire(self, job: Job, state: str, error: str | None = None) -> None:
@@ -195,6 +204,9 @@ class JobScheduler:
         self.metrics.disk_bytes_total += job.metrics.stats.disk_bytes
         self.metrics.disk_time_s_total += job.metrics.stats.disk_time_s
         self.metrics.launches_total += job.metrics.stats.launches
+        # per-job engine distributions roll up losslessly at retirement
+        self.metrics.hist.merge_engine(job.metrics.stats.hist)
+        self._sync_gauges()
         self._publish(job, state)
         self._admit()
 
@@ -214,6 +226,7 @@ class JobScheduler:
             job.error = None
             job.metrics.completed_s = time.perf_counter()
             self.metrics.jobs_cancelled += 1
+            self._sync_gauges()
             self._publish(job, CANCELLED)
             self._admit()                 # unblock jobs queued behind it
             return True
@@ -272,11 +285,19 @@ class JobScheduler:
         if job is not None:
             job.pass_value += job.stride
             backend = job.mttkrp_fn if job.mttkrp_fn is not None else job.plan
-            try:
-                cp_als_step(backend, job.cp)
-            except Exception as exc:          # noqa: BLE001 — job isolation:
-                self._retire(job, FAILED, error=repr(exc))
-                return bool(self.active or self.pending)
+            t0 = time.perf_counter()
+            with obs_trace.span("scheduler.quantum", "scheduler",
+                                job=job.job_id, tenant=job.tenant,
+                                sweep=job.cp.iteration + 1 if job.cp else 0):
+                try:
+                    cp_als_step(backend, job.cp)
+                except Exception as exc:      # noqa: BLE001 — job isolation:
+                    self.metrics.busy_time_s += time.perf_counter() - t0
+                    self._retire(job, FAILED, error=repr(exc))
+                    return bool(self.active or self.pending)
+            dt = time.perf_counter() - t0
+            self.metrics.busy_time_s += dt
+            self.metrics.hist.quantum_s.record(dt)
             self.trace.append(job.job_id)     # one bad tensor must not take
             job.metrics.iterations = job.cp.iteration  # down other tenants
             self.metrics.iterations_total += 1

@@ -36,11 +36,13 @@ from __future__ import annotations
 
 import json
 import os
+import time
 import zlib
 
 import numpy as np
 
 from repro.core import linearize as lin
+from repro.obs import trace as obs_trace
 from repro.core.blco import BLCOTensor, Block, Launch
 from repro.core.streaming import LaunchChunks, ReservationSpec, reservation_for
 
@@ -247,13 +249,18 @@ class DiskChunkSource:
         return self.stored.num_launches
 
     def chunk(self, i: int):
-        import time
         t0 = time.perf_counter()
         out = self.stored.chunk(i)
+        t1 = time.perf_counter()
+        nbytes = (out[0].nbytes + out[1].nbytes
+                  + out[2].nbytes + out[3].nbytes)
         if self.stats is not None:
-            self.stats.disk_time_s += time.perf_counter() - t0
-            self.stats.disk_bytes += (out[0].nbytes + out[1].nbytes
-                                      + out[2].nbytes + out[3].nbytes)
+            self.stats.disk_time_s += t1 - t0
+            self.stats.disk_bytes += nbytes
+            self.stats.hist.disk_read_s.record(t1 - t0)
+        if obs_trace.TRACING.enabled:
+            obs_trace.add_event("store.read", "store", t0, t1,
+                                launch=i, bytes=nbytes)
         return out
 
     def __iter__(self):

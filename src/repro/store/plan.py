@@ -18,6 +18,7 @@ import os
 
 from repro.core.mttkrp import DEFAULT_COPIES, validate_kernel
 from repro.core.streaming import EngineStats, ReservationSpec, stream_mttkrp
+from repro.obs import trace as obs_trace
 
 from .format import StoredBLCO, open_blco, save_blco
 
@@ -70,12 +71,16 @@ class DiskStreamedPlan:
                copies: int | None = None):
         if self._closed:
             raise RuntimeError("plan is closed")
-        return stream_mttkrp(
-            self.stored.chunks(stats=self._stats), self.stored, factors,
-            mode, queues=self.queues,
-            resolution=resolution if resolution is not None else self.resolution,
-            copies=copies if copies is not None else self.copies,
-            stats=self._stats, kernel=self.kernel, interpret=self.interpret)
+        with obs_trace.span("plan.mttkrp", "plan", backend=self.backend,
+                            mode=mode):
+            return stream_mttkrp(
+                self.stored.chunks(stats=self._stats), self.stored, factors,
+                mode, queues=self.queues,
+                resolution=resolution if resolution is not None
+                else self.resolution,
+                copies=copies if copies is not None else self.copies,
+                stats=self._stats, kernel=self.kernel,
+                interpret=self.interpret)
 
     def device_bytes(self) -> int:
         """Reservation bytes in flight (identical to the streamed regime)."""

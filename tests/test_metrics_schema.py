@@ -1,0 +1,118 @@
+"""Schema stability for the metrics snapshots.
+
+External consumers (the Prometheus renderer, dashboards, the regression
+gate) key off snapshot dictionaries.  These tests pin a golden key list
+per snapshot: keys may be *added* in later PRs (append to the golden
+list), but removing or renaming one fails here first, on purpose.
+Every snapshot must also round-trip through ``json.dumps`` — no Inf/NaN,
+no non-string dict keys, no dataclasses leaking through.
+"""
+import json
+
+import pytest
+
+from repro.core.streaming import EngineStats
+from repro.obs.hist import Hist
+from repro.service import JobMetrics, ServiceMetrics
+
+# ----------------------------------------------------------------- goldens
+# Grow-only: append new keys at the end; never delete or rename.
+JOB_KEYS = {
+    "iterations", "queue_wait_s", "run_time_s", "cache_hit", "backend",
+    "released_bytes", "h2d_bytes", "disk_bytes", "mttkrp_calls", "launches",
+    "put_time_s", "disk_time_s", "dispatch_time_s", "device_time_s",
+    "hist",
+}
+
+SERVICE_KEYS = {
+    "jobs_submitted", "jobs_admitted", "jobs_completed", "jobs_failed",
+    "jobs_cancelled", "preemptions", "cancel_freed_bytes_total",
+    "blco_cache_hits", "blco_cache_misses", "blco_disk_hits",
+    "spills", "spill_bytes_total", "loads", "jobs_restored",
+    "iterations_total", "iterations_per_sec",
+    "h2d_bytes_total", "disk_bytes_total", "disk_time_s_total",
+    "launches_total",
+    "busy_time_s", "uptime_s",
+    "queue_depth", "running_jobs", "host_budget_used_bytes",
+    "tenant_iterations", "tenant_shares",
+    "admitted_reservation_bytes", "peak_admitted_reservation_bytes",
+    "hist",
+}
+
+ENGINE_STATS_KEYS = {
+    "backend", "mttkrp_calls", "h2d_bytes", "disk_bytes", "launches",
+    "put_time_s", "disk_time_s", "dispatch_time_s", "device_time_s",
+    "total_time_s", "hist",
+}
+
+HIST_KEYS = {"count", "sum", "min", "max", "buckets"}
+
+ENGINE_HIST_NAMES = {"dispatch_s", "put_chunk_s", "disk_read_s",
+                     "launch_nnz"}
+SERVICE_HIST_NAMES = ENGINE_HIST_NAMES | {"queue_wait_s", "quantum_s"}
+
+
+def test_job_metrics_snapshot_keys_only_grow():
+    snap = JobMetrics().snapshot()
+    missing = JOB_KEYS - set(snap)
+    assert not missing, f"JobMetrics.snapshot() lost keys: {missing}"
+    json.dumps(snap)
+    assert set(snap["hist"]) >= ENGINE_HIST_NAMES
+    for h in snap["hist"].values():
+        assert set(h) >= HIST_KEYS
+
+
+def test_service_metrics_snapshot_keys_only_grow():
+    snap = ServiceMetrics().snapshot()
+    missing = SERVICE_KEYS - set(snap)
+    assert not missing, f"ServiceMetrics.snapshot() lost keys: {missing}"
+    json.dumps(snap)
+    assert set(snap["hist"]) >= SERVICE_HIST_NAMES
+    for h in snap["hist"].values():
+        assert set(h) >= HIST_KEYS
+
+
+def test_engine_stats_snapshot_keys_only_grow():
+    snap = EngineStats().snapshot()
+    missing = ENGINE_STATS_KEYS - set(snap)
+    assert not missing, f"EngineStats.snapshot() lost keys: {missing}"
+    json.dumps(snap)
+
+
+def test_snapshots_json_safe_with_data():
+    m = ServiceMetrics()
+    m.record_iteration("alice")
+    m.record_iteration("bob")
+    m.hist.queue_wait_s.record(0.01)
+    m.hist.quantum_s.record(0.5)
+    m.busy_time_s = 0.5
+    text = json.dumps(m.snapshot())
+    back = json.loads(text)
+    assert back["tenant_iterations"] == {"alice": 1, "bob": 1}
+    assert back["tenant_shares"]["alice"] == pytest.approx(0.5)
+    # bucket keys are string-typed les, safe as JSON object keys
+    assert all(isinstance(k, str)
+               for k in back["hist"]["quantum_s"]["buckets"])
+
+
+def test_hist_snapshot_has_no_infinities():
+    h = Hist()
+    h.record(1e12)                       # lands in the +Inf bucket
+    snap = h.snapshot()
+    text = json.dumps(snap, allow_nan=False)   # raises on Inf/NaN
+    assert "+Inf" in snap["buckets"]
+    assert json.loads(text)["count"] == 1
+
+
+def test_iterations_per_sec_uses_busy_time_not_wall_clock():
+    m = ServiceMetrics()
+    m.iterations_total = 10
+    m.busy_time_s = 2.0
+    assert m.iterations_per_sec() == pytest.approx(5.0)
+    # idle time does not decay the rate: back-date construction far into
+    # the past — a wall-clock denominator would crater the value
+    m.started_s -= 3600.0
+    assert m.iterations_per_sec() == pytest.approx(5.0)
+    assert m.uptime_s >= 3600.0
+    # and with no busy time, the rate is 0, not a division error
+    assert ServiceMetrics().iterations_per_sec() == 0.0

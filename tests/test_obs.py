@@ -1,0 +1,282 @@
+"""Observability layer: span tracer, log2 histograms, exporters, and the
+end-to-end acceptance path (traced disk-streamed CP-ALS whose span sums
+agree with the EngineStats the same timestamps fed)."""
+import json
+import math
+import threading
+
+import numpy as np
+import pytest
+
+from repro import core, obs
+from repro.core.cp_als import cp_als
+from repro.engine import plan_for
+from repro.obs.hist import Hist, NBUCKETS, bucket_index, bucket_le
+
+
+@pytest.fixture(autouse=True)
+def _clean_tracer():
+    """Every test starts and ends with the global tracer off, empty, and
+    back at the default ring-buffer capacity (enable() keeps the current
+    capacity, so a capacity-shrinking test must not leak into the next)."""
+    obs.enable(capacity=obs.trace.DEFAULT_CAPACITY)
+    obs.disable()
+    obs.clear()
+    yield
+    obs.enable(capacity=obs.trace.DEFAULT_CAPACITY)
+    obs.disable()
+    obs.clear()
+
+
+def _factors(dims, rank=4, seed=0):
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    return [jnp.asarray(rng.standard_normal((d, rank)).astype(np.float32))
+            for d in dims]
+
+
+# ------------------------------------------------------------------- hist
+def test_bucket_index_boundaries():
+    # exact powers of two land in the bucket whose le equals them
+    for v in (0.25, 0.5, 1.0, 2.0, 1024.0):
+        i = bucket_index(v)
+        assert bucket_le(i) == v
+    # just above a power of two spills into the next bucket
+    assert bucket_index(1.0000001) == bucket_index(1.0) + 1
+    # non-positive values land in the lowest bucket
+    assert bucket_index(0.0) == 0
+    assert bucket_index(-3.5) == 0
+    # huge values clamp into the final +Inf bucket
+    assert bucket_index(2.0 ** 40) == NBUCKETS - 1
+    assert bucket_le(NBUCKETS - 1) == math.inf
+
+
+def test_hist_record_merge_quantile():
+    h = Hist()
+    for v in (0.001, 0.002, 0.004, 0.008):
+        h.record(v)
+    assert h.count == 4
+    assert h.sum == pytest.approx(0.015)
+    assert h.min == 0.001 and h.max == 0.008
+    assert h.mean == pytest.approx(0.015 / 4)
+    assert h.quantile(1.0) == h.max
+    assert h.quantile(0.25) <= h.quantile(0.75)
+    other = Hist()
+    other.record(1.0)
+    h.merge(other)
+    assert h.count == 5 and h.max == 1.0
+    # cumulative buckets are monotone and end with +Inf at total count
+    cum = h.cumulative()
+    assert cum[-1][0] == math.inf and cum[-1][1] == 5
+    assert all(c1 <= c2 for (_, c1), (_, c2) in zip(cum, cum[1:]))
+
+
+def test_hist_snapshot_json_safe_when_empty():
+    snap = Hist().snapshot()
+    json.dumps(snap)                         # inf min/max would blow up here
+    assert snap["count"] == 0 and snap["buckets"] == {}
+    h = Hist()
+    h.record(3.0)
+    snap = h.snapshot()
+    json.dumps(snap)
+    assert sum(snap["buckets"].values()) == 1
+
+
+# ------------------------------------------------------------------ tracer
+def test_disabled_span_is_shared_noop_singleton():
+    s1 = obs.span("a", "main")
+    s2 = obs.span("b", "other", nnz=5)
+    assert s1 is s2                          # zero allocation on the fast path
+    with s1 as inner:
+        assert inner is s1
+    assert obs.spans() == []
+
+
+def test_disabled_add_event_records_nothing():
+    obs.add_event("x", "h2d", 0.0, 1.0, bytes=10)
+    assert obs.spans() == []
+
+
+def test_enabled_spans_record_nesting_and_attrs():
+    obs.enable()
+    with obs.span("outer", "scheduler", job=1) as outer:
+        with obs.span("inner", "plan") as inner:
+            inner.set(backend="streamed")
+        obs.add_event("ev", "h2d", outer.start_s, outer.start_s + 0.5, n=3)
+    got = obs.spans()
+    names = {s.name: s for s in got}
+    assert set(names) == {"outer", "inner", "ev"}
+    assert names["inner"].parent == "outer"
+    assert names["ev"].parent == "outer"     # add_event inherits the context
+    assert names["outer"].parent is None
+    assert names["inner"].attrs["backend"] == "streamed"
+    assert names["ev"].duration_s == pytest.approx(0.5)
+    assert names["outer"].end_s >= names["inner"].end_s
+
+
+def test_ring_buffer_bounded_and_counts_drops():
+    obs.enable(capacity=4)
+    for i in range(10):
+        with obs.span(f"s{i}", "main"):
+            pass
+    assert len(obs.spans()) == 4
+    assert obs.TRACING.dropped == 6
+    assert [s.name for s in obs.spans()] == ["s6", "s7", "s8", "s9"]
+    drained = obs.drain()
+    assert len(drained) == 4 and obs.spans() == []
+
+
+def test_enabled_context_manager_restores_state():
+    assert not obs.is_enabled()
+    with obs.trace.enabled():
+        assert obs.is_enabled()
+        with obs.span("in", "main"):
+            pass
+    assert not obs.is_enabled()
+    assert len(obs.spans()) == 1
+
+
+def test_contextvar_parenting_is_per_thread():
+    obs.enable()
+    seen = []
+
+    def worker():
+        with obs.span("thread-span", "main") as s:
+            seen.append(s.parent)
+
+    with obs.span("main-span", "main"):
+        th = threading.Thread(target=worker)
+        th.start()
+        th.join()
+    assert seen == [None]                    # no cross-thread parent leakage
+
+
+# --------------------------------------------------------------- exporters
+def test_chrome_trace_structure():
+    obs.enable()
+    with obs.span("a", "dispatch", nnz=7):
+        pass
+    obs.add_event("b", "h2d", obs.TRACING.epoch_s, obs.TRACING.epoch_s + 1e-3)
+    doc = obs.chrome_trace()
+    json.dumps(doc)
+    xs = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+    metas = [e for e in doc["traceEvents"] if e["ph"] == "M"]
+    assert {e["name"] for e in xs} == {"a", "b"}
+    track_names = {e["args"]["name"] for e in metas
+                   if e["name"] == "thread_name"}
+    assert {"dispatch", "h2d"} <= track_names
+    # distinct tracks get distinct tids; events carry their attrs
+    tids = {e["cat"]: e["tid"] for e in xs}
+    assert tids["dispatch"] != tids["h2d"]
+    a = next(e for e in xs if e["name"] == "a")
+    assert a["args"]["nnz"] == 7
+    assert doc["otherData"]["dropped_spans"] == 0
+
+
+def test_track_totals_sums_durations():
+    obs.enable()
+    obs.add_event("x", "h2d", 0.0, 0.25)
+    obs.add_event("y", "h2d", 1.0, 1.5)
+    obs.add_event("z", "store", 0.0, 0.125)
+    tot = obs.track_totals()
+    assert tot["h2d"] == pytest.approx(0.75)
+    assert tot["store"] == pytest.approx(0.125)
+
+
+def test_render_prometheus_format():
+    from repro.service import ServiceMetrics
+    m = ServiceMetrics()
+    m.iterations_total = 7
+    m.busy_time_s = 2.0
+    m.tenant_iterations = {"a": 4, "b": 3}
+    m.hist.quantum_s.record(0.5)
+    text = obs.render_prometheus(m)
+    assert "# TYPE repro_iterations_total counter" in text
+    assert "repro_iterations_total 7" in text
+    assert 'repro_tenant_iterations_total{tenant="a"} 4' in text
+    assert "# TYPE repro_quantum_s histogram" in text
+    assert 'repro_quantum_s_bucket{le="+Inf"} 1' in text
+    assert "repro_quantum_s_count 1" in text
+    assert "repro_iterations_per_busy_sec 3.5" in text
+    assert "# TYPE repro_queue_depth gauge" in text
+
+
+# ------------------------------------------------- end-to-end acceptance
+def test_traced_disk_streamed_als_spans_match_stats(tmp_path):
+    """The ISSUE acceptance path: a disk-streamed CP-ALS run with tracing
+    enabled produces a Perfetto-loadable trace with distinct store-read /
+    H2D-put / device-dispatch spans whose per-track duration sums agree
+    with the EngineStats histogram totals (exactly, by construction)."""
+    t = core.random_tensor((30, 24, 18), 2000, seed=1)
+    b = core.build_blco(t, max_nnz_per_block=256)
+    obs.enable()
+    plan = plan_for(b, 1 << 30, rank=4, backend="disk_streamed",
+                    store_path=str(tmp_path / "t.blco"))
+    cp_als(plan, t.dims, 4, iters=2,
+           norm_x=float(np.linalg.norm(t.values.astype(np.float64))),
+           tol=0.0, seed=0)
+    st = plan.stats()
+    plan.close()
+    obs.disable()
+
+    names = {s.name for s in obs.spans()}
+    assert {"store.read", "h2d.put", "dispatch.launch", "device.fence",
+            "plan.mttkrp"} <= names
+    tot = obs.track_totals()
+    for track, stat_total in (("store", st.disk_time_s),
+                              ("h2d", st.put_time_s),
+                              ("dispatch", st.dispatch_time_s),
+                              ("device", st.device_time_s)):
+        assert tot[track] == pytest.approx(stat_total, rel=0.10), track
+    # histogram sums equal the scalar totals (same samples)
+    assert st.hist.put_chunk_s.sum == pytest.approx(st.put_time_s)
+    assert st.hist.disk_read_s.sum == pytest.approx(st.disk_time_s)
+    assert st.hist.dispatch_s.sum == pytest.approx(st.dispatch_time_s)
+    assert st.hist.launch_nnz.count == st.launches
+    assert int(st.hist.launch_nnz.sum) == b.nnz * st.mttkrp_calls
+    # and the export is valid Chrome trace JSON
+    doc = obs.write_chrome_trace(str(tmp_path / "trace.json"))
+    with open(tmp_path / "trace.json") as f:
+        assert json.load(f) == doc
+
+
+def test_tracing_disabled_records_nothing_on_hot_path():
+    t = core.random_tensor((20, 16, 12), 800, seed=2)
+    b = core.build_blco(t, max_nnz_per_block=128)
+    plan = plan_for(b, 1 << 30, rank=3, backend="streamed")
+    plan.mttkrp(_factors(t.dims, rank=3), 0)
+    st = plan.stats()
+    plan.close()
+    assert obs.spans() == []                 # nothing recorded...
+    assert st.hist.dispatch_s.count == st.launches   # ...hists still fill
+
+
+def test_service_trace_and_metrics_endpoints():
+    from repro.service import (GetMetrics, GetTrace, ServiceRuntime,
+                               SubmitDecomposition)
+    t = core.random_tensor((20, 15, 10), 600, seed=3)
+    obs.enable()
+    with ServiceRuntime(device_budget_bytes=256 << 20) as rt:
+        job = rt.submit(SubmitDecomposition(tensor=t, rank=3, iters=2,
+                                            tol=0.0, tenant="t0"))
+        rt.wait(job, timeout=300)
+        m = rt.get_metrics()
+        prom = rt.get_metrics(GetMetrics(format="prometheus"))
+        doc = rt.trace(GetTrace(drain=True))
+    obs.disable()
+    json.dumps(m)
+    assert m["iterations_total"] == 2
+    assert m["busy_time_s"] > 0
+    assert m["iterations_per_sec"] == pytest.approx(2 / m["busy_time_s"])
+    assert "repro_busy_time_s" in prom
+    names = {e["name"] for e in doc["traceEvents"] if e["ph"] == "X"}
+    assert "scheduler.quantum" in names
+    # quantum spans parent the plan spans opened on the worker thread
+    plan_spans = [e for e in doc["traceEvents"]
+                  if e["ph"] == "X" and e["name"] == "plan.mttkrp"]
+    assert plan_spans
+    assert all(e["args"]["parent"] == "scheduler.quantum"
+               for e in plan_spans)
+    assert obs.spans() == []                 # drain=True emptied the buffer
+    with pytest.raises(ValueError):
+        rt.service.get_metrics(GetMetrics(format="xml"))

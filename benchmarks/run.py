@@ -313,13 +313,18 @@ def bench_multitenant(rows, *, fast: bool = False,
                                             tol=0.0, seed=i, build=build))
         warm.drain(timeout=600)
 
-    with ServiceRuntime(device_budget_bytes=64 << 20, queues=4) as rt:
+    # enqueue every weighted tenant BEFORE the worker starts: submitting
+    # into a live worker lets the first tenant burn through its capped
+    # sweeps while the rest are still being registered, which skews the
+    # measured share window (all of it spent on one tenant)
+    rt = ServiceRuntime(device_budget_bytes=64 << 20, queues=4)
+    job_tenant = {}
+    for i, (name, w, t) in enumerate(tenants):
+        job_tenant[rt.submit(SubmitDecomposition(
+            tensor=t, rank=rank, iters=int(base_iters * w), tol=0.0,
+            seed=i, build=build, tenant=name, weight=w))] = name
+    with rt:
         t0 = time.perf_counter()
-        job_tenant = {}
-        for i, (name, w, t) in enumerate(tenants):
-            job_tenant[rt.submit(SubmitDecomposition(
-                tensor=t, rank=rank, iters=int(base_iters * w), tol=0.0,
-                seed=i, build=build, tenant=name, weight=w))] = name
         victim = rt.submit(SubmitDecomposition(
             tensor=t_big, rank=rank, iters=10_000, tol=0.0, seed=9,
             build=build, tenant="victim", weight=0.5))

@@ -78,7 +78,10 @@ def compare_pair(old: dict, new: dict) -> dict:
         metrics.update(_flat_metrics(old, new))
     ratios = {}
     for name, (o, n, direction) in metrics.items():
-        if not (o > 0 and n > 0):
+        # a null/non-numeric metric (crashed sub-bench, hand-edited file)
+        # is skipped, never a crash in the gate itself
+        if not all(isinstance(v, (int, float)) and not isinstance(v, bool)
+                   and v > 0 for v in (o, n)):
             continue
         # ratio > 1 always means "fresh run is worse"
         ratios[name] = (n / o) if direction == "lower" else (o / n)
@@ -173,9 +176,13 @@ def main(argv=None) -> int:
                       f"{rec['worst_ratio']:.3f}x "
                       f"({rec['compared_metrics']} metrics)")
         if verdict["geomean_ratio"] is None:
-            print("bench_compare: nothing comparable "
-                  "(config-mismatched fast run vs full baselines is "
-                  "expected when suites do not overlap)")
+            if not records:
+                print("bench_compare: SKIP — no baseline/fresh file pairs "
+                      "to compare; nothing to gate")
+            else:
+                print("bench_compare: nothing comparable "
+                      "(config-mismatched fast run vs full baselines is "
+                      "expected when suites do not overlap)")
         else:
             state = "REGRESSED" if verdict["regressed"] else "OK"
             print(f"bench_compare: {state} — overall geomean "

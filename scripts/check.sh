@@ -8,6 +8,9 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+echo "== repro-lint (blocking) =="
+python scripts/lint.py
+
 if [[ "${1:-}" == "--fast" ]]; then
     python -m pytest -x -q tests/test_service.py tests/test_streaming.py \
         tests/test_cp_als.py

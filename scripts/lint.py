@@ -1,0 +1,85 @@
+#!/usr/bin/env python
+"""repro-lint: run the repo's AST lint passes (see repro.analysis).
+
+Usage:
+    python scripts/lint.py [paths...] [--baseline scripts/lint_baseline.json]
+                           [--format text|json] [--write-baseline] [--list]
+
+Default paths: src/repro.  Exit status 1 when any finding is not covered
+by the committed baseline (or an inline ``# repro-lint: disable=<pass>``
+comment), 0 otherwise.  ``--write-baseline`` records the current findings
+as the new baseline — entries are stamped with a placeholder reason that
+MUST be replaced with a real justification before committing.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO_ROOT, "src"))
+
+from repro.analysis import Baseline, all_passes, lint_paths  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("paths", nargs="*",
+                    default=[os.path.join(REPO_ROOT, "src", "repro")])
+    ap.add_argument("--baseline",
+                    default=os.path.join(REPO_ROOT, "scripts",
+                                         "lint_baseline.json"))
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="report every finding, ignoring the baseline")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write current findings as the suppression "
+                         "baseline (justify every entry before committing)")
+    ap.add_argument("--list", action="store_true",
+                    help="list the registered passes and exit")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for p in all_passes():
+            print(f"{p.pass_id:24s} {p.description}")
+        return 0
+
+    findings = lint_paths(args.paths, root=REPO_ROOT)
+
+    if args.write_baseline:
+        Baseline.from_findings(
+            findings,
+            reason="TODO: justify or fix (recorded by --write-baseline)",
+        ).save(args.baseline)
+        print(f"wrote {len(findings)} finding(s) to {args.baseline}")
+        return 0
+
+    baseline = Baseline([]) if args.no_baseline else Baseline.load(
+        args.baseline)
+    unsuppressed = [f for f in findings if not baseline.suppresses(f)]
+    stale = baseline.stale_entries(findings)
+
+    if args.format == "json":
+        print(json.dumps({
+            "findings": [vars(f) for f in unsuppressed],
+            "suppressed": len(findings) - len(unsuppressed),
+            "stale_baseline_entries": stale,
+        }, indent=2))
+    else:
+        for f in unsuppressed:
+            print(f.render())
+        for e in stale:
+            print(f"warning: stale baseline entry "
+                  f"{e['pass']}:{e['path']}:{e['symbol']} — the finding it "
+                  f"suppressed no longer exists; remove it")
+        n_sup = len(findings) - len(unsuppressed)
+        print(f"repro-lint: {len(unsuppressed)} finding(s), "
+              f"{n_sup} baseline-suppressed, {len(stale)} stale baseline "
+              f"entr{'y' if len(stale) == 1 else 'ies'}")
+    return 1 if unsuppressed else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

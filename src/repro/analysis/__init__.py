@@ -1,0 +1,25 @@
+"""Repo-specific static analysis + runtime sanitizer.
+
+``repro.analysis`` mechanizes the invariants earlier PRs fixed by hand so
+they are checked by tooling instead of reviewer memory:
+
+* :mod:`repro.analysis.linter` — an AST lint framework with passes traced
+  to shipped bug classes (silent dtype downcasts, host sync in hot paths,
+  unfenced device timing, lock discipline, span hygiene).  Run it via
+  ``scripts/lint.py``.
+* :mod:`repro.analysis.sanitize` — a runtime sanitizer
+  (``REPRO_SANITIZE=1`` or ``plan_for(..., sanitize=True)``) wrapping any
+  ExecutionPlan with shape/dtype/finiteness contracts, plus ledger audits
+  and lock-ownership assertions inside the service.
+"""
+from .linter import (Baseline, Finding, LintPass, ParsedModule,  # noqa: F401
+                     all_passes, lint_paths, lint_sources)
+from .sanitize import (SanitizedPlan, SanitizerError,  # noqa: F401
+                       sanitize_enabled, sanitized, wrap_plan)
+
+__all__ = [
+    "Baseline", "Finding", "LintPass", "ParsedModule", "all_passes",
+    "lint_paths", "lint_sources",
+    "SanitizedPlan", "SanitizerError", "sanitize_enabled", "sanitized",
+    "wrap_plan",
+]

@@ -1,0 +1,21 @@
+"""The registered repo-specific lint passes.
+
+Each pass mechanizes one invariant a shipped PR fixed by hand; see the
+individual modules for the bug class each one traces to.
+"""
+from .dtype_promotion import DtypePromotionPass
+from .host_sync import HostSyncPass
+from .lock_discipline import LockDisciplinePass
+from .span_hygiene import SpanHygienePass
+from .unfenced_timing import UnfencedTimingPass
+
+REGISTRY = [
+    DtypePromotionPass,
+    HostSyncPass,
+    UnfencedTimingPass,
+    LockDisciplinePass,
+    SpanHygienePass,
+]
+
+__all__ = ["REGISTRY", "DtypePromotionPass", "HostSyncPass",
+           "UnfencedTimingPass", "LockDisciplinePass", "SpanHygienePass"]

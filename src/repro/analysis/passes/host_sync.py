@@ -1,0 +1,96 @@
+"""host-sync pass: no host round-trips inside device-dispatched code.
+
+Bug class (PRs 2-3): the per-launch Python loop + per-call host numpy
+padding the launch cache replaced.  Code that executes under ``jax.jit``,
+as a ``lax.scan`` body, or as a ``pallas_call`` kernel must not touch host
+numpy (``np.*``), force device->host syncs (``.tolist()`` / ``.item()``),
+or loop in Python over launch/chunk sequences — each of those serializes
+the dispatch pipeline the whole design exists to keep async.
+
+Scope: the hot dispatch layers (``core/launches.py``, ``engine/plans.py``,
+``kernels/``).  "Hot" functions are found structurally: decorated with a
+``jit`` (directly or through ``functools.partial``), referenced inside a
+``pallas_call``, or passed to a ``.scan``.
+"""
+from __future__ import annotations
+
+import ast
+
+from ..linter import Finding, LintPass, ParsedModule
+from .common import call_name, dotted, root_name
+
+PASS_ID = "host-sync-in-hot-path"
+
+HOST_MODULES = frozenset({"np", "numpy"})
+SYNC_METHODS = frozenset({"tolist", "item"})
+LOOP_HINTS = ("launch", "chunk")
+
+
+def _decorated_with_jit(fn) -> bool:
+    for dec in fn.decorator_list:
+        for node in ast.walk(dec):
+            if isinstance(node, ast.Attribute) and node.attr == "jit":
+                return True
+            if isinstance(node, ast.Name) and node.id == "jit":
+                return True
+    return False
+
+
+def _hot_function_names(tree: ast.AST) -> set[str]:
+    """Names referenced inside pallas_call/scan call sites (kernel bodies
+    and scan bodies are hot transitively through those call expressions)."""
+    hot: set[str] = set()
+    for call in ast.walk(tree):
+        if not isinstance(call, ast.Call):
+            continue
+        if call_name(call) in ("pallas_call", "scan"):
+            for sub in ast.walk(call):
+                if isinstance(sub, ast.Name):
+                    hot.add(sub.id)
+    return hot
+
+
+class HostSyncPass(LintPass):
+    pass_id = PASS_ID
+    description = ("host numpy / sync / Python launch loop inside a "
+                   "jitted, scanned, or pallas-dispatched function")
+    scope = ("core/launches.py", "engine/plans.py", "kernels/")
+
+    def run(self, module: ParsedModule) -> list[Finding]:
+        findings: list[Finding] = []
+        seen: set[tuple] = set()    # a nested def is walked by its outer
+        hot_names = _hot_function_names(module.tree)
+        for qualname, fn in module.functions():
+            if not (_decorated_with_jit(fn) or fn.name in hot_names):
+                continue
+            for node in ast.walk(fn):
+                msg = None
+                if isinstance(node, ast.Call):
+                    name = call_name(node)
+                    if isinstance(node.func, ast.Attribute) and \
+                            root_name(node.func) in HOST_MODULES:
+                        msg = (f"host numpy call {dotted(node.func)}() in a "
+                               f"device-dispatched function")
+                    elif name in SYNC_METHODS and \
+                            isinstance(node.func, ast.Attribute):
+                        msg = (f".{name}() forces a device->host sync in a "
+                               f"device-dispatched function")
+                elif isinstance(node, (ast.For, ast.AsyncFor)):
+                    it = dotted(node.iter) if not isinstance(node.iter,
+                                                             ast.Call) \
+                        else call_name(node.iter)
+                    if any(h in (it or "").lower() for h in LOOP_HINTS):
+                        msg = (f"Python loop over {it!r} in a "
+                               f"device-dispatched function — launches must "
+                               f"go through the scan/stacked path")
+                if msg is None:
+                    continue
+                loc = (node.lineno, node.col_offset)
+                if loc in seen:
+                    continue
+                seen.add(loc)
+                if module.is_disabled(self.pass_id, node, fn):
+                    continue
+                findings.append(module.finding(self.pass_id, node, msg,
+                                               scope=fn))
+        return findings

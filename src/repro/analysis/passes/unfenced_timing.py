@@ -1,0 +1,69 @@
+"""unfenced-timing pass: dispatch timing must fence the device.
+
+Bug class (PR 3): JAX dispatch is asynchronous, so bracketing a compute
+call with ``time.perf_counter()`` measures the *host-side issue cost*,
+not device execution.  Every timed dispatch path in the repo therefore
+fences with ``block_until_ready()`` before reading the second timestamp
+(the ``EngineStats`` dispatch-vs-device split exists for exactly this).
+
+The rule is holistic per outermost function (nested helpers fold into
+their enclosing function, because a fence at the end of the outer loop
+legitimately covers per-chunk timestamps taken inside closures — see
+``core.streaming.stream_mttkrp``): a function that
+
+* reads ``time.perf_counter()`` at least twice, and
+* issues at least one device dispatch (an ``mttkrp``-family call or a
+  ``device_put``), and
+* never calls ``block_until_ready``
+
+is reporting async dispatch time as device time.
+"""
+from __future__ import annotations
+
+import ast
+
+from ..linter import Finding, LintPass, ParsedModule
+from .common import call_name
+
+PASS_ID = "unfenced-timing"
+
+
+def _is_dispatch(call: ast.Call) -> bool:
+    name = call_name(call)
+    return "mttkrp" in name.lower() or name == "device_put"
+
+
+class UnfencedTimingPass(LintPass):
+    pass_id = PASS_ID
+    description = ("perf_counter pair around a device dispatch with no "
+                   "block_until_ready fence")
+    scope = ()
+
+    def run(self, module: ParsedModule) -> list[Finding]:
+        findings: list[Finding] = []
+        for qualname, fn in module.outer_functions():
+            timers = 0
+            dispatches = []
+            fenced = False
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                name = call_name(node)
+                if name == "perf_counter":
+                    timers += 1
+                elif name == "block_until_ready":
+                    fenced = True
+                elif _is_dispatch(node):
+                    dispatches.append(node)
+            if timers >= 2 and dispatches and not fenced:
+                node = dispatches[0]
+                if module.is_disabled(self.pass_id, node, fn):
+                    continue
+                findings.append(module.finding(
+                    self.pass_id, node,
+                    f"{qualname} times a device dispatch with "
+                    f"perf_counter but never fences with "
+                    f"block_until_ready() — async dispatch time would be "
+                    f"reported as device time (PR-3 bug class)",
+                    scope=fn))
+        return findings

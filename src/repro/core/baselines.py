@@ -46,7 +46,7 @@ class COOFormat:
 
 @functools.partial(jax.jit, static_argnames=("mode", "out_rows"))
 def _coo_mttkrp(indices, values, factors, *, mode: int, out_rows: int):
-    partial = values[:, None].astype(factors[0].dtype)
+    partial = values[:, None].astype(jnp.result_type(values, factors[0]))
     for m, f in enumerate(factors):
         if m == mode:
             continue
@@ -95,7 +95,7 @@ class FCOOFormat:
 @functools.partial(jax.jit, static_argnames=("mode", "out_rows", "num_segments"))
 def _fcoo_mttkrp(indices, values, segids, factors, *, mode: int, out_rows: int,
                  num_segments: int):
-    partial = values[:, None].astype(factors[0].dtype)
+    partial = values[:, None].astype(jnp.result_type(values, factors[0]))
     for m, f in enumerate(factors):
         if m == mode:
             continue
@@ -160,7 +160,7 @@ def _csf_root_mttkrp(indices, values, segids, seg_root, factors, *, mode: int,
                      out_rows: int, num_segments: int):
     """Root-mode traversal: accumulate per sub-tree, ONE write per root index
     (conflict-free — the CSF family's core advantage for the root mode)."""
-    partial = values[:, None].astype(factors[0].dtype)
+    partial = values[:, None].astype(jnp.result_type(values, factors[0]))
     for m, f in enumerate(factors):
         if m == mode:
             continue

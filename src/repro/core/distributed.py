@@ -97,7 +97,7 @@ def make_distributed_mttkrp(blco: BLCOTensor, mesh, *, data_axis="data",
             bases = bases.reshape(-1, n_modes)
             coords = delinearize(re_fields, re_shifts, hi, lo)
             coords = [c + bases[:, m] for m, c in enumerate(coords)]
-            partial = vals[:, None].astype(factors[0].dtype)
+            partial = vals[:, None].astype(jnp.result_type(vals, factors[0]))
             for m, f in enumerate(factors):
                 if m == mode:
                     continue

@@ -221,7 +221,15 @@ def stream_mttkrp(chunks, blco: BLCOTensor, factors, mode: int, *,
         from repro.kernels.fused import fused_mttkrp_flat
     factors = tuple(jnp.asarray(f) for f in factors)
     rank = factors[0].shape[1]
-    out = jnp.zeros((b.dims[mode], rank), factors[0].dtype)
+    # accumulate at the promoted precision (f64 values vs f32 factors must
+    # not downcast); ``b`` is a BLCOTensor or a StoredBLCO — the empty
+    # asarray canonicalizes the value dtype under the active x64 setting
+    val_dtype = getattr(b, "value_dtype", None)
+    if val_dtype is None:
+        val_dtype = b.values.dtype
+    out_dtype = jnp.result_type(jnp.asarray(np.zeros(0, val_dtype)),
+                                factors[0])
+    out = jnp.zeros((b.dims[mode], rank), out_dtype)
     stats = stats if stats is not None else StreamStats()
 
     t_start = time.perf_counter()

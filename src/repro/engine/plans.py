@@ -201,6 +201,7 @@ class ShardedPlan:
         self.dims = blco.dims
         self.mesh = mesh
         self._nnz = blco.nnz
+        self._value_dtype = blco.values.dtype
         self._device_bytes = sharded_bytes(blco, mesh, data_axis=data_axis)
         self._run = make_distributed_mttkrp(
             blco, mesh, data_axis=data_axis, model_axis=model_axis) \
@@ -216,7 +217,11 @@ class ShardedPlan:
         self._stats.launches += 1
         if self._run is None:
             rank = factors[0].shape[1]
-            return jnp.zeros((self.dims[mode], rank), factors[0].dtype)
+            # empty-tensor case at the promoted precision, matching the
+            # sharded compute path (result_type of values vs factors)
+            out_dtype = jnp.result_type(
+                jnp.asarray(np.zeros(0, self._value_dtype)), factors[0])
+            return jnp.zeros((self.dims[mode], rank), out_dtype)
         return self._run(factors, mode)
 
     def device_bytes(self) -> int:

@@ -47,7 +47,7 @@ def plan_for(blco: BLCOTensor, device_budget_bytes: int, *, rank: int,
              tensor=None, resolution: str = "auto",
              copies: int = DEFAULT_COPIES, kernel: str = "xla",
              interpret: bool = True, host_budget_bytes: int | None = None,
-             store_path: str | None = None):
+             store_path: str | None = None, sanitize: bool | None = None):
     """Build the ExecutionPlan for ``blco`` under ``device_budget_bytes``.
 
     ``tensor`` (the original SparseTensor) is only consulted for baseline
@@ -64,7 +64,14 @@ def plan_for(blco: BLCOTensor, device_budget_bytes: int, *, rank: int,
     a ``DiskStreamedPlan`` feeds the device from mmap'd chunks with an
     O(queues x reservation) host window.  Raises ValueError when no
     regime fits the budget.
+
+    ``sanitize`` wraps the plan in the runtime sanitizer's contract
+    checker (:mod:`repro.analysis.sanitize`): ``True``/``False`` force it
+    on/off, ``None`` (default) follows ``REPRO_SANITIZE``.  Sanitized
+    plans are bit-identical to plain ones — the wrapper only inspects
+    inputs and outputs.
     """
+    from repro.analysis.sanitize import wrap_plan
     with obs_trace.span("engine.plan_for", "plan", nnz=blco.nnz,
                         requested=backend) as sp:
         plan = _plan_for_impl(
@@ -75,7 +82,7 @@ def plan_for(blco: BLCOTensor, device_budget_bytes: int, *, rank: int,
             interpret=interpret, host_budget_bytes=host_budget_bytes,
             store_path=store_path)
         sp.set(backend=plan.backend)
-        return plan
+        return wrap_plan(plan, enable=sanitize)
 
 
 def _plan_for_impl(blco: BLCOTensor, device_budget_bytes: int, *, rank: int,

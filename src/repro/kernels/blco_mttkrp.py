@@ -31,7 +31,7 @@ from jax.experimental import pallas as pl
 
 
 def _hadamard(vals, gathered):
-    partial = vals[:, None].astype(gathered[0].dtype)
+    partial = vals[:, None].astype(jnp.result_type(vals, gathered[0]))
     for u in gathered:
         partial = partial * u
     return partial
@@ -87,7 +87,7 @@ def mttkrp_segments(vals, tgt, gathered, *, tile: int = 256,
         in_specs=[vec, vec] + [mat] * len(gathered),
         out_specs=(vec, mat),
         out_shape=(jax.ShapeDtypeStruct((t,), jnp.int32),
-                   jax.ShapeDtypeStruct((t, r), gathered[0].dtype)),
+                   jax.ShapeDtypeStruct((t, r), jnp.result_type(vals, gathered[0]))),
         interpret=interpret,
     )(vals, tgt, *gathered)
     return seg_tgt, seg_sums
@@ -133,6 +133,7 @@ def mttkrp_stash(vals, tgt, gathered, *, out_rows: int, tile: int = 256,
         grid=grid,
         in_specs=[vec, vec] + [mat] * len(gathered),
         out_specs=pl.BlockSpec((out_rows, r), lambda i: (0, 0)),  # revisited
-        out_shape=jax.ShapeDtypeStruct((out_rows, r), gathered[0].dtype),
+        out_shape=jax.ShapeDtypeStruct((out_rows, r),
+                                   jnp.result_type(vals, gathered[0])),
         interpret=interpret,
     )(vals, tgt, *gathered)

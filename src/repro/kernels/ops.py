@@ -66,7 +66,8 @@ def pallas_mttkrp_phases(blco: BLCOTensor, factors, mode: int, *,
     use_stash = (resolution == "hierarchical"
                  and blco.dims[mode] <= STASH_MAX_ROWS)
     if cache.num_launches == 0:
-        return jnp.zeros((blco.dims[mode], rank), factors[0].dtype)
+        return jnp.zeros((blco.dims[mode], rank),
+                         jnp.result_type(cache.vals, factors[0]))
 
     hi, lo, vals, bases = cache.flat()
     t = int(hi.shape[0])

@@ -45,7 +45,7 @@ def mttkrp_segments_ref(vals, tgt, gathered, *, tile: int):
     t = vals.shape[0]
     r = gathered[0].shape[1]
     assert t % tile == 0
-    partial = vals[:, None].astype(gathered[0].dtype)
+    partial = vals[:, None].astype(jnp.result_type(vals, gathered[0]))
     for u in gathered:
         partial = partial * u
     seg_in_tile, tile_id = _tile_segments(tgt, tile)
@@ -58,7 +58,7 @@ def mttkrp_segments_ref(vals, tgt, gathered, *, tile: int):
 def mttkrp_stash_ref(vals, tgt, gathered, *, out_rows: int):
     """Oracle for the stash (hierarchical small-mode) variant: full (I, R)
     accumulation — equivalent to a plain scatter-add of all partials."""
-    partial = vals[:, None].astype(gathered[0].dtype)
+    partial = vals[:, None].astype(jnp.result_type(vals, gathered[0]))
     for u in gathered:
         partial = partial * u
     out = jnp.zeros((out_rows, partial.shape[1]), partial.dtype)

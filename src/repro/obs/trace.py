@@ -174,7 +174,11 @@ def enable(capacity: int | None = None) -> None:
 
 
 def disable() -> None:
-    TRACING.enabled = False
+    # writes to the singleton go under its lock (hot-path READS of
+    # ``TRACING.enabled`` stay lock-free by design: a stale read is a
+    # dropped span, a torn enable/resize sequence would be corruption)
+    with TRACING.lock:
+        TRACING.enabled = False
 
 
 def is_enabled() -> bool:
@@ -216,5 +220,6 @@ class enabled:
         return self
 
     def __exit__(self, *exc) -> bool:
-        TRACING.enabled = self._was
+        with TRACING.lock:
+            TRACING.enabled = self._was
         return False

@@ -192,17 +192,18 @@ class ServiceEngine:
         disk-streamed through the same pooled reservation shapes, without
         ever reloading the tensor into host memory.
         """
+        from repro.analysis.sanitize import wrap_plan
         working = factor_bytes(handle.dims, rank, dtype)
         if not handle.resident:
             if self.streamed_cost(handle) + working <= budget_remaining:
-                return self._plan_disk(handle, working)
+                return wrap_plan(self._plan_disk(handle, working))
             return None
         rc = self.resident_cost(handle)
         if rc + working <= budget_remaining:
-            return self._plan_resident(handle, working)
+            return wrap_plan(self._plan_resident(handle, working))
         sc = self.streamed_cost(handle)
         if sc + working <= budget_remaining:
-            return self._plan_streamed(handle, working)
+            return wrap_plan(self._plan_streamed(handle, working))
         return None
 
     def _plan_resident(self, handle: TensorHandle,

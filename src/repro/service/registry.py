@@ -26,6 +26,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import os
+import threading
 
 import numpy as np
 
@@ -138,12 +139,20 @@ class TensorRegistry:
     spilling — after every operation that grows the resident set, the
     least-recently-used unpinned handles are spilled until resident
     ``host_bytes()`` fits the budget.
+
+    Thread-safe: the service runtime's worker thread and caller threads
+    (submit paths, snapshot queries) reach the registry concurrently, so
+    every method serializes on one internal re-entrant lock — re-entrant
+    because the operations compose (``register`` → ``adopt`` /
+    ``_maybe_spill`` → ``spill`` → ``persist``).  Lock ordering with the
+    runtime is strictly runtime → registry; the registry never calls out.
     """
 
     def __init__(self, *, store_dir: str | None = None,
                  host_budget_bytes: int | None = None):
         self.store_dir = store_dir
         self.host_budget_bytes = host_budget_bytes
+        self._lock = threading.RLock()
         self._cache: dict[str, TensorHandle] = {}
         self._clock = 0
         self.hits = 0
@@ -163,8 +172,9 @@ class TensorRegistry:
         return os.path.join(self.store_dir, f"{key}.blco")
 
     def _touch(self, handle: TensorHandle) -> None:
-        self._clock += 1
-        handle.last_used = self._clock
+        with self._lock:
+            self._clock += 1
+            handle.last_used = self._clock
 
     # ------------------------------------------------------------- register
     def register(self, t: SparseTensor, *,
@@ -172,41 +182,43 @@ class TensorRegistry:
                  reservation_nnz: int | None = None) -> TensorHandle:
         build = build or BuildParams()
         key = fingerprint(t, build, reservation_nnz)
-        handle = self._cache.get(key)
-        if handle is not None:
-            self.hits += 1
+        with self._lock:
+            handle = self._cache.get(key)
+            if handle is not None:
+                self.hits += 1
+                self._touch(handle)
+                return handle
+            # restart path: the fingerprint names a store file written by a
+            # previous process — adopt the stub instead of rebuilding the
+            # BLCO.  A damaged file (crash mid-write on an old layout, bit
+            # rot) must not brick registration while we hold the COO: fall
+            # through to a rebuild, which re-persists over it on the next
+            # spill.
+            if self.store_dir is not None:
+                path = os.path.join(self.store_dir, f"{key}.blco")
+                if os.path.exists(path):
+                    from repro.store import StoreError
+                    try:
+                        handle = self.adopt(key, path)
+                    except StoreError:
+                        pass
+                    else:
+                        self.hits += 1
+                        self.disk_hits += 1
+                        return handle
+            self.misses += 1
+            blco = build_blco(t, target_bits=build.target_bits,
+                              max_nnz_per_block=build.max_nnz_per_block,
+                              launch_nnz_budget=build.launch_nnz_budget)
+            spec = reservation_for(blco, reservation_nnz)
+            handle = TensorHandle(
+                key=key, dims=t.dims, nnz=t.nnz,
+                norm_x=float(np.linalg.norm(t.values.astype(np.float64))),
+                blco=blco, spec=spec, chunks=LaunchChunks(blco, spec.nnz))
+            self._cache[key] = handle
             self._touch(handle)
+            self._maybe_spill()
             return handle
-        # restart path: the fingerprint names a store file written by a
-        # previous process — adopt the stub instead of rebuilding the BLCO.
-        # A damaged file (crash mid-write on an old layout, bit rot) must
-        # not brick registration while we hold the COO: fall through to a
-        # rebuild, which re-persists over it on the next spill.
-        if self.store_dir is not None:
-            path = os.path.join(self.store_dir, f"{key}.blco")
-            if os.path.exists(path):
-                from repro.store import StoreError
-                try:
-                    handle = self.adopt(key, path)
-                except StoreError:
-                    pass
-                else:
-                    self.hits += 1
-                    self.disk_hits += 1
-                    return handle
-        self.misses += 1
-        blco = build_blco(t, target_bits=build.target_bits,
-                          max_nnz_per_block=build.max_nnz_per_block,
-                          launch_nnz_budget=build.launch_nnz_budget)
-        spec = reservation_for(blco, reservation_nnz)
-        handle = TensorHandle(
-            key=key, dims=t.dims, nnz=t.nnz,
-            norm_x=float(np.linalg.norm(t.values.astype(np.float64))),
-            blco=blco, spec=spec, chunks=LaunchChunks(blco, spec.nnz))
-        self._cache[key] = handle
-        self._touch(handle)
-        self._maybe_spill()
-        return handle
 
     def adopt(self, key: str, path: str) -> TensorHandle:
         """Register a spilled stub straight from a store file (no COO, no
@@ -219,25 +231,27 @@ class TensorRegistry:
         ``StoreCorruptionError`` — which ``register`` turns into a
         rebuild when it still holds the COO.
         """
-        handle = self._cache.get(key)
-        if handle is not None:
+        with self._lock:
+            handle = self._cache.get(key)
+            if handle is not None:
+                self._touch(handle)
+                return handle
+            from repro.store import open_blco
+            with open_blco(path, verify=True) as stored:
+                if stored.fingerprint is not None \
+                        and stored.fingerprint != key:
+                    from repro.store import StoreCorruptionError
+                    raise StoreCorruptionError(
+                        f"{path}: stored fingerprint {stored.fingerprint!r} "
+                        f"does not match registry key {key!r}")
+                handle = TensorHandle(
+                    key=key, dims=stored.dims, nnz=stored.nnz,
+                    norm_x=float(stored.norm_x or 0.0),
+                    blco=None, spec=stored.spec, chunks=None,
+                    store_path=path)
+            self._cache[key] = handle
             self._touch(handle)
             return handle
-        from repro.store import open_blco
-        with open_blco(path, verify=True) as stored:
-            if stored.fingerprint is not None and stored.fingerprint != key:
-                from repro.store import StoreCorruptionError
-                raise StoreCorruptionError(
-                    f"{path}: stored fingerprint {stored.fingerprint!r} "
-                    f"does not match registry key {key!r}")
-            handle = TensorHandle(
-                key=key, dims=stored.dims, nnz=stored.nnz,
-                norm_x=float(stored.norm_x or 0.0),
-                blco=None, spec=stored.spec, chunks=None,
-                store_path=path)
-        self._cache[key] = handle
-        self._touch(handle)
-        return handle
 
     # ------------------------------------------------------------ spill tier
     def persist(self, key: str) -> str:
@@ -246,15 +260,16 @@ class TensorRegistry:
         Keeps the host copy (unlike ``spill``) — this is the snapshot
         write path, safe to call on pinned handles.
         """
-        handle = self._require(key)
-        if handle.store_path is not None:
-            return handle.store_path
-        path = self._store_file(key)
-        from repro.store import save_blco
-        save_blco(handle.blco, path, reservation_nnz=handle.spec.nnz,
-                  fingerprint=key, norm_x=handle.norm_x)
-        handle.store_path = path
-        return path
+        with self._lock:
+            handle = self._require(key)
+            if handle.store_path is not None:
+                return handle.store_path
+            path = self._store_file(key)
+            from repro.store import save_blco
+            save_blco(handle.blco, path, reservation_nnz=handle.spec.nnz,
+                      fingerprint=key, norm_x=handle.norm_x)
+            handle.store_path = path
+            return path
 
     def spill(self, key: str) -> int:
         """Write ``key``'s BLCO to the store and drop its host arrays.
@@ -262,23 +277,24 @@ class TensorRegistry:
         Returns the host bytes freed.  Refuses pinned handles (live plans
         hold the blco/chunks); a no-op (0) for already-spilled handles.
         """
-        handle = self._require(key)
-        if not handle.resident:
-            return 0
-        if handle.pins > 0:
-            raise RuntimeError(
-                f"tensor {key} is pinned by {handle.pins} live plan(s); "
-                f"close them before spilling")
-        with obs_trace.span("registry.spill", "registry", key=key,
-                            nnz=handle.nnz) as sp:
-            self.persist(key)
-            freed = handle.host_bytes
-            handle.blco = None
-            handle.chunks = None
-            self.spills += 1
-            self.spill_bytes += freed
-            sp.set(bytes=freed)
-        return freed
+        with self._lock:
+            handle = self._require(key)
+            if not handle.resident:
+                return 0
+            if handle.pins > 0:
+                raise RuntimeError(
+                    f"tensor {key} is pinned by {handle.pins} live plan(s); "
+                    f"close them before spilling")
+            with obs_trace.span("registry.spill", "registry", key=key,
+                                nnz=handle.nnz) as sp:
+                self.persist(key)
+                freed = handle.host_bytes
+                handle.blco = None
+                handle.chunks = None
+                self.spills += 1
+                self.spill_bytes += freed
+                sp.set(bytes=freed)
+            return freed
 
     def maybe_load(self, key: str) -> TensorHandle:
         """Reload a spilled handle only when the host tier has room.
@@ -289,14 +305,15 @@ class TensorRegistry:
         a registry under genuine host pressure keeps the stub and lets
         jobs disk-stream — reloading there would just thrash the LRU.
         """
-        handle = self._require(key)
-        if handle.resident:
-            return handle
-        if self.host_budget_bytes is not None and \
-                self.host_bytes() + handle.format_bytes \
-                > self.host_budget_bytes:
-            return handle
-        return self.load(key)
+        with self._lock:
+            handle = self._require(key)
+            if handle.resident:
+                return handle
+            if self.host_budget_bytes is not None and \
+                    self.host_bytes() + handle.format_bytes \
+                    > self.host_budget_bytes:
+                return handle
+            return self.load(key)
 
     def load(self, key: str) -> TensorHandle:
         """Reload a spilled handle's BLCO from the store (un-spill).
@@ -306,20 +323,21 @@ class TensorRegistry:
         load-after-spill (or after a process restart) is bit-identical to
         the original registration.
         """
-        handle = self._require(key)
-        self._touch(handle)
-        if handle.resident:
+        with self._lock:
+            handle = self._require(key)
+            self._touch(handle)
+            if handle.resident:
+                return handle
+            from repro.store import open_blco
+            with obs_trace.span("registry.load", "registry", key=key,
+                                nnz=handle.nnz):
+                with open_blco(handle.store_path) as stored:
+                    handle.blco = stored.to_blco()
+                handle.chunks = LaunchChunks(handle.blco, handle.spec.nnz)
+            self.loads += 1
+            self._touch(handle)           # the reload makes it MRU
+            self._maybe_spill(keep=handle)
             return handle
-        from repro.store import open_blco
-        with obs_trace.span("registry.load", "registry", key=key,
-                            nnz=handle.nnz):
-            with open_blco(handle.store_path) as stored:
-                handle.blco = stored.to_blco()
-            handle.chunks = LaunchChunks(handle.blco, handle.spec.nnz)
-        self.loads += 1
-        self._touch(handle)               # the reload makes it MRU
-        self._maybe_spill(keep=handle)
-        return handle
 
     def _maybe_spill(self, keep: TensorHandle | None = None) -> None:
         """LRU: spill least-recently-used unpinned handles over the budget.
@@ -331,21 +349,23 @@ class TensorRegistry:
         """
         if self.host_budget_bytes is None or self.store_dir is None:
             return
-        while self.host_bytes() > self.host_budget_bytes:
-            victims = sorted(
-                (h for h in self._cache.values()
-                 if h.resident and h.pins == 0 and h is not keep),
-                key=lambda h: h.last_used)
-            if not victims:
-                return           # everything resident is pinned; over-budget
-            self.spill(victims[0].key)
+        with self._lock:
+            while self.host_bytes() > self.host_budget_bytes:
+                victims = sorted(
+                    (h for h in self._cache.values()
+                     if h.resident and h.pins == 0 and h is not keep),
+                    key=lambda h: h.last_used)
+                if not victims:
+                    return       # everything resident is pinned; over-budget
+                self.spill(victims[0].key)
 
     # ---------------------------------------------------------------- lookup
     def get(self, key: str) -> TensorHandle | None:
-        handle = self._cache.get(key)
-        if handle is not None:
-            self._touch(handle)
-        return handle
+        with self._lock:
+            handle = self._cache.get(key)
+            if handle is not None:
+                self._touch(handle)
+            return handle
 
     def evict(self, key: str) -> bool:
         """Drop a cached handle entirely; refuses while any plan holds it.
@@ -356,24 +376,27 @@ class TensorRegistry:
         error.  The store file, if any, is left on disk (it is the
         durable tier; delete it through the filesystem if truly unwanted).
         """
-        handle = self._cache.get(key)
-        if handle is None:
-            return False
-        if handle.pins > 0:
-            raise RuntimeError(
-                f"tensor {key} is pinned by {handle.pins} live plan(s); "
-                f"close them before evicting")
-        del self._cache[key]
-        return True
+        with self._lock:
+            handle = self._cache.get(key)
+            if handle is None:
+                return False
+            if handle.pins > 0:
+                raise RuntimeError(
+                    f"tensor {key} is pinned by {handle.pins} live plan(s); "
+                    f"close them before evicting")
+            del self._cache[key]
+            return True
 
     def _require(self, key: str) -> TensorHandle:
-        handle = self._cache.get(key)
-        if handle is None:
-            raise KeyError(f"unknown tensor key {key!r}")
-        return handle
+        with self._lock:
+            handle = self._cache.get(key)
+            if handle is None:
+                raise KeyError(f"unknown tensor key {key!r}")
+            return handle
 
     def __len__(self) -> int:
-        return len(self._cache)
+        with self._lock:
+            return len(self._cache)
 
     def host_bytes(self) -> int:
         """Host-resident tensor bytes across all cached handles.
@@ -383,12 +406,14 @@ class TensorRegistry:
         live on disk.  Padded launch chunks are no longer materialized up
         front (``LaunchChunks`` pads lazily), so they do not appear here.
         """
-        return sum(h.host_bytes for h in self._cache.values())
+        with self._lock:
+            return sum(h.host_bytes for h in self._cache.values())
 
     def store_bytes(self) -> int:
         """Bytes of this registry's handles resident in the disk tier."""
-        total = 0
-        for h in self._cache.values():
-            if h.store_path is not None and os.path.exists(h.store_path):
-                total += os.path.getsize(h.store_path)
-        return total
+        with self._lock:
+            total = 0
+            for h in self._cache.values():
+                if h.store_path is not None and os.path.exists(h.store_path):
+                    total += os.path.getsize(h.store_path)
+            return total

@@ -139,28 +139,36 @@ class ServiceRuntime:
         self._error: BaseException | None = None
         self._thread: threading.Thread | None = None
         self.scheduler.observers.append(self._on_event)
+        # the sanitizer's lock-order assertion: every scheduler mutation on
+        # a runtime-owned scheduler must hold the runtime lock
+        self.scheduler.guard_lock = self._lock
 
     # ----------------------------------------------------------- lifecycle
     def start(self) -> "ServiceRuntime":
-        if self._thread is not None:
-            raise RuntimeError("runtime already started")
-        self._thread = threading.Thread(target=self._drive,
-                                        name="service-runtime", daemon=True)
-        self._thread.start()
+        with self._lock:
+            if self._thread is not None:
+                raise RuntimeError("runtime already started")
+            thread = threading.Thread(target=self._drive,
+                                      name="service-runtime", daemon=True)
+            self._thread = thread
+        thread.start()
         return self
 
     def stop(self) -> None:
         """Stop the worker after the in-flight sweep; close all feeds.
 
         Unfinished jobs stay in the scheduler (their plans remain held);
-        call ``drain()`` first for a graceful shutdown.
+        call ``drain()`` first for a graceful shutdown.  The thread handle
+        is swapped out under the lock (so concurrent ``stop`` calls each
+        join a private reference, never a half-cleared attribute) but
+        joined OUTSIDE it — the worker needs the lock to finish its sweep.
         """
         with self._lock:
             self._stop = True
             self._work.notify_all()
-        if self._thread is not None:
-            self._thread.join()
-            self._thread = None
+            thread, self._thread = self._thread, None
+        if thread is not None:
+            thread.join()
         with self._lock:
             for feed in self._feeds:
                 feed.close()
@@ -201,9 +209,12 @@ class ServiceRuntime:
                 self._feeds.clear()
 
     def _check_worker(self) -> None:
-        if self._error is not None:
-            raise RuntimeError("service runtime worker failed") \
-                from self._error
+        # callers reach here from outside the lock too (wait/stream error
+        # paths); the re-entrant lock makes the guarded read safe both ways
+        with self._lock:
+            if self._error is not None:
+                raise RuntimeError("service runtime worker failed") \
+                    from self._error
 
     # ------------------------------------------------------------- control
     def submit(self, req: SubmitDecomposition) -> int:
@@ -293,26 +304,31 @@ class ServiceRuntime:
         feed.close()
 
     def _on_event(self, job: sched.Job, kind: str) -> None:
-        # called by the scheduler under the runtime lock (worker thread
-        # during sweeps, caller threads during control actions)
-        if not self._feeds:
-            return      # snapshotting fits/metrics for nobody is O(iters^2)
-        self._seq += 1
-        event = JobEvent(
-            seq=self._seq, kind=kind, job_id=job.job_id, tenant=job.tenant,
-            state=job.state,
-            iteration=job.cp.iteration if job.cp is not None else 0,
-            fit=job.fit,
-            fits=tuple(job.cp.fits) if job.cp is not None else (),
-            weight=job.weight, backend=job.metrics.backend,
-            metrics=job.metrics.snapshot(), timestamp_s=time.perf_counter())
-        closed = []
-        for feed in self._feeds:
-            feed.publish(event)
-            if feed._closed:
-                closed.append(feed)
-        for feed in closed:
-            self._feeds.remove(feed)
+        # called by the scheduler with the runtime lock already held
+        # (worker thread during sweeps, caller threads during control
+        # actions); the re-entrant acquire makes the guarantee lexical
+        # instead of by-convention — a future caller that forgets the lock
+        # synchronizes here instead of racing on _seq/_feeds
+        with self._lock:
+            if not self._feeds:
+                return  # snapshotting fits/metrics for nobody is O(iters^2)
+            self._seq += 1
+            event = JobEvent(
+                seq=self._seq, kind=kind, job_id=job.job_id,
+                tenant=job.tenant, state=job.state,
+                iteration=job.cp.iteration if job.cp is not None else 0,
+                fit=job.fit,
+                fits=tuple(job.cp.fits) if job.cp is not None else (),
+                weight=job.weight, backend=job.metrics.backend,
+                metrics=job.metrics.snapshot(),
+                timestamp_s=time.perf_counter())
+            closed = []
+            for feed in self._feeds:
+                feed.publish(event)
+                if feed._closed:
+                    closed.append(feed)
+            for feed in closed:
+                self._feeds.remove(feed)
 
     # -------------------------------------------------------------- waiting
     def wait(self, job_id: int, timeout: float | None = None) -> JobStatus:

@@ -38,6 +38,7 @@ import dataclasses
 import time
 from typing import Callable
 
+from repro.analysis import sanitize as _san
 from repro.core.cp_als import CPState, cp_als_init, cp_als_step
 from repro.obs import trace as obs_trace
 
@@ -128,6 +129,7 @@ class JobScheduler:
         job keeps its original id and resumes from its checkpointed sweep
         instead of a fresh ``cp_als_init``.
         """
+        _san.assert_scheduler_guard(self, "scheduler.submit")
         if not weight > 0:
             raise ValueError(f"tenant weight must be > 0, got {weight!r}")
         need = self.engine.min_cost(handle, rank)
@@ -154,36 +156,40 @@ class JobScheduler:
 
     def _admit(self) -> None:
         """Admit queued jobs FIFO while the measured byte budget allows."""
-        while self.pending:
-            if self.max_active is not None and \
-                    len(self.active) >= self.max_active:
-                return
-            job = self.jobs[self.pending[0]]
-            remaining = self.device_budget_bytes \
-                - self.metrics.admitted_reservation_bytes
-            plan = self.engine.try_plan(job.handle, rank=job.rank,
-                                        budget_remaining=remaining)
-            if plan is None:
-                return                       # head-of-line waits; keep FIFO
-            self.pending.pop(0)
-            self.metrics.hold_bytes(plan.device_bytes())
-            job.plan = plan
-            job.state = RUNNING
-            # a newly admitted job enters one quantum past the current
-            # virtual time: it cannot starve tenants already in flight
-            job.pass_value = self._global_pass + job.stride
-            job.metrics.admitted_s = time.perf_counter()
-            job.metrics.backend = plan.backend
-            job.metrics.stats = plan.stats()
-            self.metrics.hist.queue_wait_s.record(job.metrics.queue_wait_s)
-            if job.cp is None:          # restored jobs carry their CPState
-                job.cp = cp_als_init(job.handle.dims, job.rank,
-                                     norm_x=job.handle.norm_x, tol=job.tol,
-                                     seed=job.seed)
-            self.active.append(job.job_id)
-            self.metrics.jobs_admitted += 1
-            self._sync_gauges()
-            self._publish(job, "admitted")
+        try:
+            while self.pending:
+                if self.max_active is not None and \
+                        len(self.active) >= self.max_active:
+                    return
+                job = self.jobs[self.pending[0]]
+                remaining = self.device_budget_bytes \
+                    - self.metrics.admitted_reservation_bytes
+                plan = self.engine.try_plan(job.handle, rank=job.rank,
+                                            budget_remaining=remaining)
+                if plan is None:
+                    return                   # head-of-line waits; keep FIFO
+                self.pending.pop(0)
+                self.metrics.hold_bytes(plan.device_bytes())
+                job.plan = plan
+                job.state = RUNNING
+                # a newly admitted job enters one quantum past the current
+                # virtual time: it cannot starve tenants already in flight
+                job.pass_value = self._global_pass + job.stride
+                job.metrics.admitted_s = time.perf_counter()
+                job.metrics.backend = plan.backend
+                job.metrics.stats = plan.stats()
+                self.metrics.hist.queue_wait_s.record(
+                    job.metrics.queue_wait_s)
+                if job.cp is None:      # restored jobs carry their CPState
+                    job.cp = cp_als_init(job.handle.dims, job.rank,
+                                         norm_x=job.handle.norm_x,
+                                         tol=job.tol, seed=job.seed)
+                self.active.append(job.job_id)
+                self.metrics.jobs_admitted += 1
+                self._sync_gauges()
+                self._publish(job, "admitted")
+        finally:
+            _san.audit_scheduler(self, "scheduler._admit")
 
     def _retire(self, job: Job, state: str, error: str | None = None) -> None:
         job.state = state
@@ -208,6 +214,7 @@ class JobScheduler:
         self.metrics.hist.merge_engine(job.metrics.stats.hist)
         self._sync_gauges()
         self._publish(job, state)
+        _san.audit_scheduler(self, "scheduler._retire")
         self._admit()
 
     # ------------------------------------------------------------- control
@@ -219,6 +226,7 @@ class JobScheduler:
         be admitted in the same call.  The job's ``CPState`` (partial
         factors, fit trajectory) survives for inspection.
         """
+        _san.assert_scheduler_guard(self, "scheduler.cancel")
         job = self._get(job_id)
         if job.state == QUEUED:
             self.pending.remove(job.job_id)
@@ -242,6 +250,7 @@ class JobScheduler:
         demotion never interrupts (or loses) the job's ``CPState`` — the
         job simply gets scheduled less often from the next pick on.
         """
+        _san.assert_scheduler_guard(self, "scheduler.set_weight")
         if not weight > 0:
             raise ValueError(f"tenant weight must be > 0, got {weight!r}")
         job = self._get(job_id)
@@ -281,6 +290,7 @@ class JobScheduler:
         share emerges across quanta: a weight-2 tenant's pass advances half
         as fast, so it is picked twice as often as a weight-1 tenant.
         """
+        _san.assert_scheduler_guard(self, "scheduler.step")
         job = self._pick()
         if job is not None:
             job.pass_value += job.stride
@@ -295,6 +305,9 @@ class JobScheduler:
                     self.metrics.busy_time_s += time.perf_counter() - t0
                     self._retire(job, FAILED, error=repr(exc))
                     return bool(self.active or self.pending)
+            _san.check_factors(job.cp.factors,
+                               f"job {job.job_id} after sweep "
+                               f"{job.cp.iteration}")
             dt = time.perf_counter() - t0
             self.metrics.busy_time_s += dt
             self.metrics.hist.quantum_s.record(dt)

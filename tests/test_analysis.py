@@ -1,0 +1,556 @@
+"""repro-lint + runtime-sanitizer suite (ISSUE 7).
+
+Three layers of coverage:
+
+* **per-pass fixtures** — every lint pass fires on a seeded known-bad
+  snippet (the exact bug classes PRs 2-6 fixed by hand: f32 downcasts,
+  host sync in hot paths, unfenced timing, unguarded lock state, spans
+  opened outside ``with``) and stays silent on the fixed form;
+* **meta-test** — the repo's own tree lints clean against the committed
+  baseline, and the baseline carries no stale or unjustified entries;
+* **sanitizer** — sanitized plans are bit-identical to plain ones on the
+  in-memory / streamed / disk-streamed backends, every mttkrp contract
+  violation raises, the admission-ledger audit catches seeded drift, and
+  a threaded race-stress run over ``ServiceRuntime`` passes with the
+  lock-order assertions armed.
+"""
+import os
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import (Baseline, Finding, SanitizedPlan, SanitizerError,
+                            lint_paths, lint_sources, sanitize_enabled,
+                            sanitized, wrap_plan)
+from repro.analysis.sanitize import audit_scheduler, check_factors
+from repro.core.blco import build_blco
+from repro.core.tensor import random_tensor
+from repro.engine import plan_for
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _only(findings, pass_id):
+    return [f for f in findings if f.pass_id == pass_id]
+
+
+# ---------------------------------------------------------------- dtype pass
+BAD_DTYPE = '''
+import jax.numpy as jnp
+
+def coo_mttkrp(vals, cols, factors, mode):
+    partial = vals[:, None].astype(factors[0].dtype)   # seeded f32 downcast
+    return partial
+'''
+
+GOOD_DTYPE = '''
+import jax.numpy as jnp
+
+def coo_mttkrp(vals, cols, factors, mode):
+    partial = vals[:, None].astype(jnp.result_type(vals, factors[0]))
+    return partial
+'''
+
+BAD_DTYPE_ZEROS = '''
+import jax.numpy as jnp
+
+def stream_mttkrp(b, factors, mode, rank):
+    out = jnp.zeros((b.dims[mode], rank), factors[0].dtype)
+    return out
+'''
+
+
+def test_dtype_promotion_flags_factor_dtype_downcast():
+    findings = _only(lint_sources({"src/repro/core/x.py": BAD_DTYPE}),
+                     "dtype-promotion")
+    assert len(findings) == 1
+    assert findings[0].symbol == "coo_mttkrp"
+    assert "result_type" in findings[0].message
+
+
+def test_dtype_promotion_flags_zeros_with_factor_dtype():
+    findings = _only(lint_sources({"src/repro/core/x.py": BAD_DTYPE_ZEROS}),
+                     "dtype-promotion")
+    assert len(findings) == 1
+
+
+def test_dtype_promotion_clean_on_result_type_idiom():
+    assert not _only(lint_sources({"src/repro/core/x.py": GOOD_DTYPE}),
+                     "dtype-promotion")
+
+
+# ------------------------------------------------------------ host-sync pass
+BAD_HOST_SYNC = '''
+import numpy as np
+import jax
+
+@jax.jit
+def hot_kernel(x):
+    limits = np.cumsum(x)        # host round-trip inside a jitted fn
+    return limits
+'''
+
+
+def test_host_sync_flags_numpy_in_jitted_fn():
+    findings = _only(
+        lint_sources({"src/repro/engine/plans.py": BAD_HOST_SYNC}),
+        "host-sync-in-hot-path")
+    assert len(findings) == 1
+    assert findings[0].symbol == "hot_kernel"
+
+
+def test_host_sync_scoped_to_hot_files():
+    # the same source outside the hot-path scope is not this pass's business
+    assert not _only(lint_sources({"src/repro/obs/export.py": BAD_HOST_SYNC}),
+                     "host-sync-in-hot-path")
+
+
+# ------------------------------------------------------- unfenced-timing pass
+BAD_TIMING = '''
+import time
+
+def bench_mttkrp(plan, factors):
+    t0 = time.perf_counter()
+    out = plan.mttkrp(factors, 0)         # async dispatch...
+    dt = time.perf_counter() - t0         # ...timed without a fence
+    return out, dt
+'''
+
+GOOD_TIMING = '''
+import time
+
+def bench_mttkrp(plan, factors):
+    t0 = time.perf_counter()
+    out = plan.mttkrp(factors, 0)
+    out.block_until_ready()
+    dt = time.perf_counter() - t0
+    return out, dt
+'''
+
+
+def test_unfenced_timing_flags_missing_fence():
+    findings = _only(lint_sources({"src/repro/bench.py": BAD_TIMING}),
+                     "unfenced-timing")
+    assert len(findings) == 1
+    assert findings[0].symbol == "bench_mttkrp"
+
+
+def test_unfenced_timing_clean_when_fenced():
+    assert not _only(lint_sources({"src/repro/bench.py": GOOD_TIMING}),
+                     "unfenced-timing")
+
+
+# -------------------------------------------------------- lock-discipline pass
+BAD_LOCK = '''
+import threading
+
+class Runtime:
+    def __init__(self):
+        self._lock = threading.RLock()
+        self._thread = None
+
+    def start(self):
+        with self._lock:
+            self._thread = object()
+
+    def stop(self):
+        if self._thread is not None:      # unguarded read of guarded state
+            self._thread = None
+'''
+
+GOOD_LOCK = BAD_LOCK.replace(
+    """        if self._thread is not None:      # unguarded read of guarded state
+            self._thread = None""",
+    """        with self._lock:
+            if self._thread is not None:
+                self._thread = None""")
+
+BAD_LOCK_MUTATOR = '''
+import threading
+
+class Runtime:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._feeds = []
+
+    def subscribe(self, feed):
+        with self._lock:
+            self._feeds.append(feed)
+
+    def reset(self):
+        self._feeds.clear()               # container mutation, no lock
+'''
+
+BAD_SINGLETON = '''
+import threading
+
+class TracerState:
+    def __init__(self):
+        self.lock = threading.Lock()
+        self.enabled = False
+
+TRACING = TracerState()
+
+def enable():
+    with TRACING.lock:
+        TRACING.enabled = True
+
+def disable():
+    TRACING.enabled = False               # singleton write outside its lock
+
+def is_enabled():
+    return TRACING.enabled                # reads stay lock-free by design
+'''
+
+
+def test_lock_discipline_flags_unguarded_attribute():
+    """Acceptance: reintroducing an unguarded ``_lock``-protected attribute
+    access (the pre-fix ``ServiceRuntime.stop`` shape) is caught."""
+    findings = _only(lint_sources({"src/repro/service/x.py": BAD_LOCK}),
+                     "lock-discipline")
+    assert len(findings) == 1
+    assert findings[0].symbol == "Runtime.stop"
+    assert "_thread" in findings[0].message
+
+
+def test_lock_discipline_clean_when_guarded():
+    assert not _only(lint_sources({"src/repro/service/x.py": GOOD_LOCK}),
+                     "lock-discipline")
+
+
+def test_lock_discipline_counts_container_mutation_as_write():
+    findings = _only(
+        lint_sources({"src/repro/service/x.py": BAD_LOCK_MUTATOR}),
+        "lock-discipline")
+    assert len(findings) == 1
+    assert findings[0].symbol == "Runtime.reset"
+
+
+def test_lock_discipline_singleton_write_needs_lock():
+    findings = _only(lint_sources({"src/repro/obs/x.py": BAD_SINGLETON}),
+                     "lock-discipline")
+    assert len(findings) == 1
+    assert findings[0].symbol == "disable"   # the read in is_enabled is fine
+
+
+# ----------------------------------------------------------- span-hygiene pass
+BAD_SPAN = '''
+from repro.obs import trace as obs_trace
+
+def run(plan, factors):
+    obs_trace.span("plan.mttkrp", "plan")      # never entered: records nothing
+    return plan.mttkrp(factors, 0)
+'''
+
+GOOD_SPAN = '''
+from repro.obs import trace as obs_trace
+
+def run(plan, factors):
+    with obs_trace.span("plan.mttkrp", "plan"):
+        return plan.mttkrp(factors, 0)
+'''
+
+
+def test_span_hygiene_flags_unentered_span():
+    findings = _only(lint_sources({"src/repro/engine/x.py": BAD_SPAN}),
+                     "span-hygiene")
+    assert len(findings) == 1
+
+
+def test_span_hygiene_clean_inside_with():
+    assert not _only(lint_sources({"src/repro/engine/x.py": GOOD_SPAN}),
+                     "span-hygiene")
+
+
+# ------------------------------------------------------- suppression machinery
+def test_inline_disable_comment_suppresses():
+    src = BAD_TIMING.replace(
+        "    t0 = time.perf_counter()",
+        "    t0 = time.perf_counter()",
+        1).replace(
+        "def bench_mttkrp(plan, factors):",
+        "def bench_mttkrp(plan, factors):  "
+        "# repro-lint: disable=unfenced-timing")
+    assert not _only(lint_sources({"src/repro/bench.py": src}),
+                     "unfenced-timing")
+
+
+def test_baseline_requires_reason():
+    with pytest.raises(ValueError, match="reason"):
+        Baseline([{"pass": "dtype-promotion", "path": "x.py",
+                   "symbol": "f", "reason": ""}])
+
+
+def test_baseline_suppresses_and_reports_stale():
+    f = Finding(pass_id="unfenced-timing", path="src/repro/bench.py",
+                symbol="bench_mttkrp", line=5, message="m")
+    base = Baseline([
+        {"pass": "unfenced-timing", "path": "src/repro/bench.py",
+         "symbol": "bench_mttkrp", "reason": "known, tracked in ISSUE 7"},
+        {"pass": "dtype-promotion", "path": "gone.py", "symbol": "f",
+         "reason": "file was deleted"},
+    ])
+    assert base.suppresses(f)
+    stale = base.stale_entries([f])
+    assert len(stale) == 1 and stale[0]["path"] == "gone.py"
+
+
+# ------------------------------------------------------------------ meta-test
+def test_repo_tree_lints_clean_against_committed_baseline():
+    """The repo's own invariants hold: zero findings outside the committed
+    baseline, and the baseline itself carries no stale entries."""
+    findings = lint_paths([os.path.join(REPO, "src", "repro")], root=REPO)
+    baseline = Baseline.load(os.path.join(REPO, "scripts",
+                                          "lint_baseline.json"))
+    unsuppressed = [f.render() for f in findings
+                    if not baseline.suppresses(f)]
+    assert unsuppressed == []
+    assert baseline.stale_entries(findings) == []
+
+
+# ============================================================ sanitizer layer
+@pytest.fixture
+def small():
+    t = random_tensor((12, 9, 7), nnz=180, seed=3)
+    return t, build_blco(t, max_nnz_per_block=1 << 10)
+
+
+def _factors(dims, rank, seed=0, dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    return [jnp.asarray(rng.standard_normal((d, rank)), dtype)
+            for d in dims]
+
+
+def test_sanitize_env_gate(monkeypatch):
+    monkeypatch.delenv("REPRO_SANITIZE", raising=False)
+    assert not sanitize_enabled()
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    assert sanitize_enabled()
+    monkeypatch.setenv("REPRO_SANITIZE", "0")
+    assert not sanitize_enabled()
+    with sanitized():
+        assert sanitize_enabled()        # override beats the environment
+    assert not sanitize_enabled()
+
+
+@pytest.mark.parametrize("backend", ["in_memory", "streamed",
+                                     "disk_streamed"])
+def test_sanitized_plan_bit_identical(small, tmp_path, backend):
+    """Acceptance: sanitize=True changes nothing about the numbers — the
+    wrapper only inspects, on every backend tier."""
+    t, b = small
+    factors = _factors(t.dims, 5)
+    kwargs = dict(rank=5, backend=backend)
+    if backend == "disk_streamed":
+        kwargs["store_path"] = str(tmp_path / "t.blco")
+    plain = plan_for(b, 1 << 30, sanitize=False, **kwargs)
+    sane = plan_for(b, 1 << 30, sanitize=True, **kwargs)
+    assert type(sane) is SanitizedPlan and type(plain) is not SanitizedPlan
+    try:
+        for mode in range(t.order):
+            out_p = np.asarray(plain.mttkrp(factors, mode))
+            out_s = np.asarray(sane.mttkrp(factors, mode))
+            np.testing.assert_array_equal(out_p, out_s)
+    finally:
+        plain.close()
+        sane.close()
+
+
+def test_sanitized_plan_isinstance_transparent(small):
+    from repro.engine.plans import InMemoryPlan
+    t, b = small
+    plan = plan_for(b, 1 << 30, rank=4, backend="in_memory", sanitize=True)
+    try:
+        assert isinstance(plan, InMemoryPlan)       # regime checks see through
+        assert isinstance(plan, SanitizedPlan)      # the wrap is still visible
+        assert wrap_plan(plan, enable=True) is plan  # idempotent
+    finally:
+        plan.close()
+
+
+class _FakePlan:
+    """Minimal ExecutionPlan double with a controllable mttkrp result."""
+    dims = (4, 3)
+    backend = "fake"
+
+    def __init__(self, result):
+        self._result = result
+
+    def mttkrp(self, factors, mode):
+        return self._result
+
+
+def test_sanitizer_rejects_factor_shape_and_mode():
+    plan = SanitizedPlan(_FakePlan(jnp.zeros((4, 2))))
+    good = [jnp.zeros((4, 2)), jnp.zeros((3, 2))]
+    with pytest.raises(SanitizerError, match="factor matrices"):
+        plan.mttkrp(good[:1], 0)
+    with pytest.raises(SanitizerError, match="out of range"):
+        plan.mttkrp(good, 2)
+    with pytest.raises(SanitizerError, match="factor 1 has shape"):
+        plan.mttkrp([jnp.zeros((4, 2)), jnp.zeros((5, 2))], 0)
+    assert plan.mttkrp(good, 0).shape == (4, 2)
+
+
+def test_sanitizer_rejects_output_shape_downcast_and_nonfinite():
+    good = [jnp.zeros((4, 2)), jnp.zeros((3, 2))]
+    with pytest.raises(SanitizerError, match="output shape"):
+        SanitizedPlan(_FakePlan(jnp.zeros((3, 2)))).mttkrp(good, 0)
+    with pytest.raises(SanitizerError, match="downcast"):
+        SanitizedPlan(_FakePlan(jnp.zeros((4, 2), jnp.float16))) \
+            .mttkrp(good, 0)
+    with pytest.raises(SanitizerError, match="non-finite"):
+        SanitizedPlan(_FakePlan(jnp.full((4, 2), jnp.nan))).mttkrp(good, 0)
+
+
+def test_check_factors_guards_nan():
+    with sanitized():
+        check_factors([jnp.ones((3, 2))], "ok")
+        with pytest.raises(SanitizerError, match="non-finite factor"):
+            check_factors([jnp.ones((3, 2)),
+                           jnp.full((2, 2), jnp.inf)], "sweep 3")
+    # disabled: same call is a no-op
+    check_factors([jnp.full((2, 2), jnp.nan)], "off")
+
+
+# ------------------------------------------------------- service integration
+def _service(tmp_path, budget=64 << 20):
+    from repro.service import DecompositionService
+    return DecompositionService(device_budget_bytes=budget, queues=2)
+
+
+def test_scheduler_ledger_audit_catches_seeded_drift(tmp_path):
+    """Acceptance: a hand-corrupted admission ledger (the PR-4 overcommit
+    class) trips the audit on the next lifecycle edge."""
+    from repro.service.api import SubmitDecomposition
+    svc = _service(tmp_path)
+    t = random_tensor((10, 8, 6), nnz=120, seed=0)
+    with sanitized():
+        job = svc.submit(SubmitDecomposition(tensor=t, rank=4, iters=2,
+                                             tol=0.0))
+        svc.scheduler.metrics.hold_bytes(4096)      # seeded drift
+        with pytest.raises(SanitizerError, match="ledger out of sync"):
+            svc.scheduler.cancel(job)
+
+
+def test_scheduler_clean_run_passes_audit(tmp_path):
+    from repro.service.api import SubmitDecomposition
+    svc = _service(tmp_path)
+    t = random_tensor((10, 8, 6), nnz=120, seed=0)
+    with sanitized():
+        svc.submit(SubmitDecomposition(tensor=t, rank=4, iters=2, tol=0.0))
+        svc.run()
+        audit_scheduler(svc.scheduler, "test: post-run")
+    assert svc.scheduler.metrics.admitted_reservation_bytes == 0
+
+
+def test_guard_lock_assertion_fires_without_runtime_lock(tmp_path):
+    """A runtime-owned scheduler mutated without the runtime lock is the
+    race the sanitizer's lock-order assertion exists for."""
+    from repro.service import ServiceRuntime
+    from repro.service.api import SubmitDecomposition
+    rt = ServiceRuntime(device_budget_bytes=64 << 20, queues=2)
+    t = random_tensor((10, 8, 6), nnz=120, seed=0)
+    handle = rt.service.registry.register(t)
+    with sanitized():
+        with pytest.raises(SanitizerError, match="runtime lock"):
+            rt.scheduler.submit(handle, rank=4)     # bypasses rt.submit
+        job = rt.submit(SubmitDecomposition(tensor=t, rank=4, iters=1,
+                                            tol=0.0))  # the locked path works
+    assert job == 0
+
+
+def test_runtime_race_stress_under_sanitizer():
+    """Threaded submit/cancel/set_weight/status against a live runtime with
+    every sanitizer check armed: no SanitizerError, no lost jobs, ledger
+    drained to zero."""
+    from repro.service import ServiceRuntime
+    from repro.service.api import CancelJob, SetWeight, SubmitDecomposition
+    tensors = [random_tensor((10, 8, 6), nnz=100, seed=s) for s in range(3)]
+    errors = []
+    with sanitized():
+        with ServiceRuntime(device_budget_bytes=128 << 20, queues=2) as rt:
+            ids = []
+            ids_lock = threading.Lock()
+
+            def submitter(seed):
+                try:
+                    for i in range(3):
+                        jid = rt.submit(SubmitDecomposition(
+                            tensor=tensors[(seed + i) % 3], rank=4,
+                            iters=3, tol=0.0, seed=seed,
+                            tenant=f"t{seed}", weight=1.0 + seed))
+                        with ids_lock:
+                            ids.append(jid)
+                except BaseException as exc:      # noqa: BLE001
+                    errors.append(exc)
+
+            def meddler():
+                try:
+                    for _ in range(20):
+                        with ids_lock:
+                            snapshot = list(ids)
+                        for jid in snapshot:
+                            st = rt.status(jid).state
+                            if st == "running":
+                                try:
+                                    rt.set_weight(SetWeight(weight=2.0,
+                                                            job_id=jid))
+                                except ValueError:
+                                    pass          # already terminal: fine
+                        rt.service_metrics()
+                except BaseException as exc:      # noqa: BLE001
+                    errors.append(exc)
+
+            def canceller():
+                try:
+                    for _ in range(10):
+                        with ids_lock:
+                            snapshot = list(ids)
+                        if snapshot:
+                            rt.cancel(CancelJob(job_id=snapshot[0]))
+                except BaseException as exc:      # noqa: BLE001
+                    errors.append(exc)
+
+            threads = [threading.Thread(target=submitter, args=(s,))
+                       for s in range(3)]
+            threads += [threading.Thread(target=meddler),
+                        threading.Thread(target=canceller)]
+            for th in threads:
+                th.start()
+            for th in threads:
+                th.join()
+            assert rt.drain(timeout=300)
+            assert not errors, errors
+            states = {jid: rt.status(jid).state for jid in ids}
+            assert len(states) == 9
+            assert all(s in ("done", "cancelled") for s in states.values())
+            assert rt.scheduler.metrics.admitted_reservation_bytes == 0
+
+
+def test_sanitizer_overhead_smoke(small):
+    """The wrapper's checks are O(output) per call; a sanitized sweep stays
+    within an order of magnitude of plain (this is a smoke bound against
+    accidental per-element Python work, not a perf benchmark)."""
+    import time
+    t, b = small
+    factors = _factors(t.dims, 4)
+    plain = plan_for(b, 1 << 30, rank=4, backend="in_memory", sanitize=False)
+    sane = plan_for(b, 1 << 30, rank=4, backend="in_memory", sanitize=True)
+    try:
+        for plan in (plain, sane):                 # warm both paths
+            plan.mttkrp(factors, 0).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(5):
+            plain.mttkrp(factors, 0).block_until_ready()
+        t_plain = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        for _ in range(5):
+            sane.mttkrp(factors, 0).block_until_ready()
+        t_sane = time.perf_counter() - t0
+    finally:
+        plain.close()
+        sane.close()
+    assert t_sane < 50 * max(t_plain, 1e-4)

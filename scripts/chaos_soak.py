@@ -1,0 +1,140 @@
+#!/usr/bin/env python
+"""Env-driven chaos soak: the CI chaos lane's entry point.
+
+Runs a fixed mixed-tenant workload through the async service runtime
+with whatever ``REPRO_FAULTS`` plan the environment installs (see
+``repro.faults``), records a full span trace, and asserts the PR-8
+robustness invariants:
+
+  * the worker thread survives (watchdog restarts are fine, death isn't),
+  * every job ends DONE — bit-identical to a fault-free reference run of
+    the same workload — or FAILED with an explanatory ``error_payload``,
+  * the admission ledger drains to zero (audited continuously when
+    ``REPRO_SANITIZE=1``, asserted at the end regardless).
+
+Exit status is non-zero on any violation; the Chrome trace is written to
+``--trace-out`` either way so CI can attach it to failures.
+
+    REPRO_FAULTS="1234:store.read@n=2:transient;runtime.quantum@n=3:crash" \
+        REPRO_SANITIZE=1 python scripts/chaos_soak.py --trace-out chaos.json
+"""
+import argparse
+import json
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core.tensor import SparseTensor
+from repro.faults import inject
+from repro.obs import trace as obs_trace
+from repro.service import ServiceRuntime, SubmitDecomposition, GetTrace
+
+WORKLOAD = ((0, 1, "acme", 1.0), (1, 2, "umbrella", 2.0),
+            (0, 3, "umbrella", 1.0))
+RANK, ITERS = 8, 6
+
+
+def _tensor(seed, nnz=500, dim=12):
+    rng = np.random.default_rng(seed)
+    return SparseTensor(
+        indices=rng.integers(0, dim, size=(nnz, 3)).astype(np.int64),
+        values=rng.standard_normal(nnz).astype(np.float32),
+        dims=(dim, dim, dim))
+
+
+def _run(store_dir, *, faults):
+    """One workload pass; returns (per-job outcome, metrics, trace)."""
+    ctx = inject.active(None) if not faults else _noop()
+    with ctx:
+        with ServiceRuntime(device_budget_bytes=256 << 20,
+                            store_dir=store_dir,
+                            host_budget_bytes=1) as rt:
+            ids = [rt.submit(SubmitDecomposition(
+                tensor=_tensor(ts), rank=RANK, iters=ITERS, tol=0.0,
+                seed=ss, tenant=tenant, weight=weight))
+                for ts, ss, tenant, weight in WORKLOAD]
+            ok = rt.drain(timeout=600)
+            out = {}
+            for n, jid in enumerate(ids):
+                st = rt.status(jid)
+                if st.state == "done":
+                    res = rt.result(jid).result
+                    out[n] = ("done", [float(f) for f in res.fits], None)
+                else:
+                    out[n] = (st.state, None, st.error_payload)
+            metrics = rt.service_metrics()
+            trace = rt.trace(GetTrace(drain=True))
+            dead = rt._error is not None
+    return out, metrics, trace, ok and not dead
+
+
+class _noop:
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *exc):
+        return False
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--trace-out", default="chaos_trace.json")
+    args = ap.parse_args()
+
+    plan = inject.FAULTS.plan
+    print(f"chaos soak: fault plan = {plan!r}")
+    obs_trace.enable()
+
+    with tempfile.TemporaryDirectory() as ref_dir:
+        ref, ref_metrics, _, ref_ok = _run(ref_dir, faults=False)
+    if not ref_ok or any(v[0] != "done" for v in ref.values()):
+        print("FATAL: fault-free reference run failed", file=sys.stderr)
+        return 2
+
+    with tempfile.TemporaryDirectory() as store_dir:
+        out, metrics, trace, alive = _run(store_dir, faults=True)
+
+    with open(args.trace_out, "w") as f:
+        json.dump(trace, f)
+    print(f"trace: {len(trace.get('traceEvents', []))} events "
+          f"-> {args.trace_out}")
+
+    violations = []
+    if not alive:
+        violations.append("worker died (or drain timed out)")
+    for n, (state, fits, payload) in sorted(out.items()):
+        if state == "done":
+            tag = "bit-identical" if fits == ref[n][1] else "DIVERGED"
+            print(f"  job {n}: done, {tag}")
+            if tag == "DIVERGED":
+                violations.append(f"job {n} completed but diverged "
+                                  f"from the fault-free reference")
+        elif state == "failed" and payload:
+            print(f"  job {n}: failed ({payload.get('type')}: "
+                  f"{payload.get('message')})")
+        else:
+            violations.append(f"job {n} ended {state!r} without an "
+                              f"explanatory payload")
+    for key in ("retries_total", "giveups_total", "demotions_total",
+                "watchdog_restarts", "store_rebuilds", "jobs_failed"):
+        print(f"  {key} = {metrics[key]}")
+    if metrics["admitted_reservation_bytes"] != 0:
+        violations.append(
+            f"ledger leak: admitted_reservation_bytes = "
+            f"{metrics['admitted_reservation_bytes']}")
+
+    if violations:
+        print("CHAOS SOAK FAILED:", file=sys.stderr)
+        for v in violations:
+            print(f"  - {v}", file=sys.stderr)
+        return 1
+    print("chaos soak clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

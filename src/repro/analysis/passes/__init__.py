@@ -4,6 +4,7 @@ Each pass mechanizes one invariant a shipped PR fixed by hand; see the
 individual modules for the bug class each one traces to.
 """
 from .dtype_promotion import DtypePromotionPass
+from .fault_site_hygiene import FaultSiteHygienePass
 from .host_sync import HostSyncPass
 from .lock_discipline import LockDisciplinePass
 from .span_hygiene import SpanHygienePass
@@ -15,7 +16,9 @@ REGISTRY = [
     UnfencedTimingPass,
     LockDisciplinePass,
     SpanHygienePass,
+    FaultSiteHygienePass,
 ]
 
-__all__ = ["REGISTRY", "DtypePromotionPass", "HostSyncPass",
-           "UnfencedTimingPass", "LockDisciplinePass", "SpanHygienePass"]
+__all__ = ["REGISTRY", "DtypePromotionPass", "FaultSiteHygienePass",
+           "HostSyncPass", "UnfencedTimingPass", "LockDisciplinePass",
+           "SpanHygienePass"]

@@ -100,7 +100,13 @@ class LaunchCache:
     def from_blco(cls, blco: BLCOTensor,
                   reservation_nnz: int | None = None) -> "LaunchCache":
         """Pad + stack + upload every launch of ``blco`` (host work, once)."""
+        from repro.faults import inject as faults
         from .streaming import prepare_chunks
+        # the device-resident regime's single allocation moment: a real
+        # RESOURCE_EXHAUSTED surfaces from the device_put below exactly
+        # like this injected probe, and the plan_for/ServiceEngine ladder
+        # demotes either to a streamed regime
+        faults.maybe_fail("plan.alloc")
         max_launch = max((l.nnz for l in blco.launches), default=1)
         if reservation_nnz:
             if int(reservation_nnz) < max_launch:

@@ -38,6 +38,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.faults import inject as faults
+from repro.faults.retry import retry_call
 from repro.obs import trace as obs_trace
 from repro.obs.hist import EngineHists
 
@@ -74,6 +76,9 @@ class EngineStats:
     dispatch_time_s: float = 0.0
     device_time_s: float = 0.0
     total_time_s: float = 0.0
+    retries: int = 0             # transient failures retried successfully
+    giveups: int = 0             # retry budgets exhausted (error surfaced)
+    demotions: int = 0           # regime/kernel fallbacks the ladder took
     hist: EngineHists = dataclasses.field(default_factory=EngineHists)
 
     @property
@@ -92,6 +97,9 @@ class EngineStats:
             "dispatch_time_s": self.dispatch_time_s,
             "device_time_s": self.device_time_s,
             "total_time_s": self.total_time_s,
+            "retries": self.retries,
+            "giveups": self.giveups,
+            "demotions": self.demotions,
             "hist": self.hist.snapshot(),
         }
 
@@ -239,8 +247,16 @@ def stream_mttkrp(chunks, blco: BLCOTensor, factors, mode: int, *,
     def _issue(chunk):
         t0 = time.perf_counter()
         hi, lo, vals, bases, n = chunk
-        dev = (jax.device_put(hi), jax.device_put(lo),
-               jax.device_put(vals), jax.device_put(bases))
+
+        def _put():
+            faults.maybe_fail("stream.h2d")
+            return (jax.device_put(hi), jax.device_put(lo),
+                    jax.device_put(vals), jax.device_put(bases))
+
+        # transient put failures (injected or genuine transport flake)
+        # retry with backoff; the reservation shapes make a re-put
+        # side-effect-free
+        dev = retry_call(_put, site="stream.h2d", stats=stats)
         t1 = time.perf_counter()
         nbytes = hi.nbytes + lo.nbytes + vals.nbytes + bases.nbytes
         stats.put_time_s += t1 - t0

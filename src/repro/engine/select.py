@@ -31,6 +31,7 @@ from repro.core.blco import BLCOTensor, format_bytes
 from repro.core.mttkrp import DEFAULT_COPIES, validate_kernel
 from repro.core.streaming import reservation_for
 from repro.dist.context import get_mesh
+from repro.faults import inject as faults
 from repro.obs import trace as obs_trace
 
 from .api import factor_bytes, in_memory_bytes
@@ -118,9 +119,37 @@ def _plan_for_impl(blco: BLCOTensor, device_budget_bytes: int, *, rank: int,
                 f"budget is {device_budget_bytes} B")
         return ShardedPlan(blco, mesh)
 
-    if backend == "disk_streamed" or (
-            backend == "auto" and host_budget_bytes is not None
-            and format_bytes(blco) > host_budget_bytes):
+    # ------------------------------------------------------- regime builders
+    # The three single-device regimes as closures over one kernel argument,
+    # so the degradation ladder below can retry a rung with kernel="xla"
+    # (pallas fallback) or fall one memory tier down on allocation failure.
+    demotions: list[str] = []
+
+    def _done(plan):
+        if demotions:
+            plan.stats().demotions += len(demotions)
+        return plan
+
+    def _build_in_memory(k):
+        # (the plan.alloc fault probe fires inside LaunchCache.from_blco —
+        # the regime's actual device-allocation moment)
+        return InMemoryPlan(blco, resolution=resolution, copies=copies,
+                            kernel=k, interpret=interpret)
+
+    def _build_streamed(k):
+        faults.maybe_fail("plan.alloc")
+        spec = reservation_for(blco, reservation_nnz)
+        if spec.bytes_in_flight(queues) + working > device_budget_bytes:
+            raise ValueError(
+                f"no regime fits the budget: streaming needs "
+                f"{spec.bytes_in_flight(queues) + working} B in flight "
+                f"(reservation {spec.nnz} nnz x {queues} queues + factors) "
+                f"but the device budget is {device_budget_bytes} B")
+        return StreamedPlan(blco, queues=queues, spec=spec,
+                            resolution=resolution, copies=copies,
+                            kernel=k, interpret=interpret)
+
+    def _build_disk(k):
         from repro.store import DiskStreamedPlan
         spec = reservation_for(blco, reservation_nnz)
         if spec.bytes_in_flight(queues) + working > device_budget_bytes:
@@ -139,7 +168,7 @@ def _plan_for_impl(blco: BLCOTensor, device_budget_bytes: int, *, rank: int,
             return DiskStreamedPlan.spill(
                 blco, path, reservation_nnz=spec.nnz, delete_on_close=delete,
                 queues=queues, resolution=resolution, copies=copies,
-                kernel=kernel, interpret=interpret)
+                kernel=k, interpret=interpret)
         except BaseException:
             if delete:              # don't orphan the anonymous spill file
                 try:
@@ -148,27 +177,60 @@ def _plan_for_impl(blco: BLCOTensor, device_budget_bytes: int, *, rank: int,
                     pass
             raise
 
-    if backend == "in_memory" or (backend == "auto" and
-                                  in_memory_bytes(blco) + working
+    if backend == "disk_streamed" or (
+            backend == "auto" and host_budget_bytes is not None
+            and format_bytes(blco) > host_budget_bytes):
+        return _done(_kernel_fallback(_build_disk, kernel, demotions))
+
+    # ---------------------------------------------------- degradation ladder
+    # auto mode falls one memory tier per allocation failure:
+    # in_memory -> streamed -> disk_streamed.  Explicit backends keep the
+    # kernel fallback (pallas -> xla) but never change regime — the caller
+    # asked for that tier by name.
+    auto = backend == "auto"
+    if backend == "in_memory" or (auto and in_memory_bytes(blco) + working
                                   <= device_budget_bytes):
         if in_memory_bytes(blco) + working > device_budget_bytes:
             raise ValueError(
                 f"in-memory plan needs {in_memory_bytes(blco) + working} B "
                 f"resident (tensor + factors) but the device budget is "
                 f"{device_budget_bytes} B")
-        return InMemoryPlan(blco, resolution=resolution, copies=copies,
-                            kernel=kernel, interpret=interpret)
+        try:
+            return _done(_kernel_fallback(_build_in_memory, kernel,
+                                          demotions))
+        except Exception as exc:    # noqa: BLE001 — classified right below
+            if not (auto and _is_alloc_failure(exc)):
+                raise
+            _note_demotion(demotions, "in_memory->streamed", exc)
 
-    spec = reservation_for(blco, reservation_nnz)
-    if spec.bytes_in_flight(queues) + working > device_budget_bytes:
-        raise ValueError(
-            f"no regime fits the budget: streaming needs "
-            f"{spec.bytes_in_flight(queues) + working} B in flight "
-            f"(reservation {spec.nnz} nnz x {queues} queues + factors) "
-            f"but the device budget is {device_budget_bytes} B")
-    return StreamedPlan(blco, queues=queues, spec=spec,
-                        resolution=resolution, copies=copies,
-                        kernel=kernel, interpret=interpret)
+    try:
+        return _done(_kernel_fallback(_build_streamed, kernel, demotions))
+    except Exception as exc:        # noqa: BLE001 — classified right below
+        if not (auto and _is_alloc_failure(exc)):
+            raise
+        _note_demotion(demotions, "streamed->disk_streamed", exc)
+    return _done(_kernel_fallback(_build_disk, kernel, demotions))
+
+
+_is_alloc_failure = faults.is_alloc_failure
+
+
+def _kernel_fallback(build, kernel: str, demotions: list):
+    """``build(kernel)`` with the pallas -> xla rung of the ladder."""
+    try:
+        return build(kernel)
+    except faults.KernelFailure as exc:
+        if kernel != "pallas":
+            raise
+        _note_demotion(demotions, "pallas->xla", exc)
+        return build("xla")
+
+
+def _note_demotion(demotions: list, what: str, exc: BaseException) -> None:
+    demotions.append(what)
+    with obs_trace.span("engine.demote", "plan", demote=what,
+                        error=repr(exc)):
+        pass
 
 
 class DefaultEngine:

@@ -130,9 +130,10 @@ _COUNTER_KEYS = (
     "jobs_submitted", "jobs_admitted", "jobs_completed", "jobs_failed",
     "jobs_cancelled", "preemptions", "cancel_freed_bytes_total",
     "blco_cache_hits", "blco_cache_misses", "blco_disk_hits",
-    "spills", "spill_bytes_total", "loads", "jobs_restored",
-    "iterations_total", "h2d_bytes_total", "disk_bytes_total",
-    "disk_time_s_total", "launches_total",
+    "spills", "spill_bytes_total", "loads", "store_rebuilds",
+    "jobs_restored", "retries_total", "giveups_total", "demotions_total",
+    "watchdog_restarts", "iterations_total", "h2d_bytes_total",
+    "disk_bytes_total", "disk_time_s_total", "launches_total",
 )
 
 _GAUGE_KEYS = (

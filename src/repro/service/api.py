@@ -124,6 +124,9 @@ class JobStatus:
     tenant: str = "default"
     weight: float = 1.0
     error: str | None = None
+    # quarantine explanation for FAILED jobs: type / message / where /
+    # transient / injected (see scheduler._error_payload)
+    error_payload: dict | None = None
 
 
 @dataclasses.dataclass
@@ -279,7 +282,8 @@ class DecompositionService:
             queue_wait_s=job.metrics.queue_wait_s,
             cache_hit=job.metrics.cache_hit,
             backend=job.metrics.backend, tenant=job.tenant,
-            weight=job.weight, error=job.error)
+            weight=job.weight, error=job.error,
+            error_payload=job.error_payload)
 
     def result(self, job_id: int) -> DecompositionResult:
         job = self._get_job(job_id)
@@ -346,4 +350,5 @@ class DecompositionService:
         self.metrics.spills = self.registry.spills
         self.metrics.spill_bytes_total = self.registry.spill_bytes
         self.metrics.loads = self.registry.loads
+        self.metrics.store_rebuilds = self.registry.rebuilds
         self.metrics.host_budget_used_bytes = self.registry.host_bytes()

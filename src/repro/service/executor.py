@@ -34,6 +34,7 @@ import jax.numpy as jnp
 
 from repro.core.mttkrp import DeviceBLCO
 from repro.core.streaming import ReservationSpec
+from repro.faults import inject as faults
 from repro.engine.api import factor_bytes, in_memory_bytes
 from repro.engine.plans import InMemoryPlan, StreamedPlan
 from repro.store import DiskStreamedPlan
@@ -191,6 +192,15 @@ class ServiceEngine:
         neither does.  A SPILLED handle admits straight from the store —
         disk-streamed through the same pooled reservation shapes, without
         ever reloading the tensor into host memory.
+
+        Degradation ladder: a device-allocation failure while
+        materializing the resident copy demotes the job to the streamed
+        tier, and a failure there demotes to disk-streaming when the
+        handle has a persistent copy — each demotion recorded in the
+        plan's ``EngineStats.demotions`` (the scheduler rolls it up into
+        ``demotions_total`` at admission).  Non-allocation errors
+        propagate; the pool joins below are exception-safe, so a failed
+        rung never leaks a pin or a pool refcount.
         """
         from repro.analysis.sanitize import wrap_plan
         working = factor_bytes(handle.dims, rank, dtype)
@@ -198,16 +208,34 @@ class ServiceEngine:
             if self.streamed_cost(handle) + working <= budget_remaining:
                 return wrap_plan(self._plan_disk(handle, working))
             return None
+        demotions = 0
         rc = self.resident_cost(handle)
         if rc + working <= budget_remaining:
-            return wrap_plan(self._plan_resident(handle, working))
+            try:
+                return wrap_plan(self._plan_resident(handle, working))
+            except Exception as exc:    # noqa: BLE001 — classified below
+                if not faults.is_alloc_failure(exc):
+                    raise
+                demotions += 1
         sc = self.streamed_cost(handle)
         if sc + working <= budget_remaining:
-            return wrap_plan(self._plan_streamed(handle, working))
+            try:
+                plan = self._plan_streamed(handle, working)
+            except Exception as exc:    # noqa: BLE001 — classified below
+                if not (faults.is_alloc_failure(exc)
+                        and handle.store_path is not None):
+                    raise
+                demotions += 1
+                plan = self._plan_disk(handle, working)
+            plan.stats().demotions += demotions
+            return wrap_plan(plan)
         return None
 
     def _plan_resident(self, handle: TensorHandle,
                        working: int = 0) -> PooledInMemoryPlan:
+        # the DeviceBLCO upload happens BEFORE the pool entry exists, so a
+        # failed allocation (the ladder's demotion trigger) leaves both the
+        # pool and the handle's pin count untouched
         entry = self._resident_pool.get(handle.key)
         held = 0
         if entry is None:
@@ -218,7 +246,12 @@ class ServiceEngine:
             held = entry.bytes
         entry.refcount += 1
         handle.pin()
-        return PooledInMemoryPlan(self, handle, entry, held, working)
+        try:
+            return PooledInMemoryPlan(self, handle, entry, held, working)
+        except BaseException:
+            handle.unpin()
+            self._release_resident(handle.key)
+            raise
 
     def _join_stream_pool(self, handle: TensorHandle) -> int:
         """Join (or create) the pooled reservation entry for ``handle``;
@@ -232,16 +265,35 @@ class ServiceEngine:
         handle.pin()
         return held
 
+    def _abort_stream_join(self, handle: TensorHandle) -> None:
+        """Undo a ``_join_stream_pool`` whose plan construction failed."""
+        handle.unpin()
+        self._release_stream(handle.spec)
+
     def _plan_streamed(self, handle: TensorHandle,
                        working: int = 0) -> PooledStreamedPlan:
+        faults.maybe_fail("plan.alloc")
         held = self._join_stream_pool(handle)
-        return PooledStreamedPlan(self, handle, held, working)
+        try:
+            return PooledStreamedPlan(self, handle, held, working)
+        except BaseException:
+            self._abort_stream_join(handle)
+            raise
 
     def _plan_disk(self, handle: TensorHandle,
                    working: int = 0) -> PooledDiskStreamedPlan:
-        """Disk-streamed plan joining the same reservation pool as streamed."""
+        """Disk-streamed plan joining the same reservation pool as streamed.
+
+        ``open_stored`` in the plan constructor touches the store file; a
+        corrupt or missing file must not strand the pool refcount/pin it
+        just took — the join is rolled back before the error propagates.
+        """
         held = self._join_stream_pool(handle)
-        return PooledDiskStreamedPlan(self, handle, held, working)
+        try:
+            return PooledDiskStreamedPlan(self, handle, held, working)
+        except BaseException:
+            self._abort_stream_join(handle)
+            raise
 
     # ------------------------------------------------------------- releases
     def _release_stream(self, spec: ReservationSpec) -> int:

@@ -68,6 +68,9 @@ class JobMetrics:
             "disk_time_s": self.stats.disk_time_s,
             "dispatch_time_s": self.stats.dispatch_time_s,
             "device_time_s": self.stats.device_time_s,
+            "retries": self.stats.retries,
+            "giveups": self.stats.giveups,
+            "demotions": self.stats.demotions,
             "hist": self.stats.hist.snapshot(),
         }
 
@@ -88,7 +91,12 @@ class ServiceMetrics:
     spills: int = 0                      # host -> disk evictions (LRU/manual)
     spill_bytes_total: int = 0           # host bytes freed by spilling
     loads: int = 0                       # disk -> host reloads (un-spills)
+    store_rebuilds: int = 0              # corrupt store files self-healed
     jobs_restored: int = 0               # jobs resumed from a snapshot
+    retries_total: int = 0               # transient faults absorbed by retry
+    giveups_total: int = 0               # retry budgets exhausted
+    demotions_total: int = 0             # degradation-ladder rungs taken
+    watchdog_restarts: int = 0           # worker threads revived after crash
     iterations_total: int = 0
     h2d_bytes_total: int = 0
     disk_bytes_total: int = 0            # store->host traffic of retired jobs
@@ -160,7 +168,12 @@ class ServiceMetrics:
             "spills": self.spills,
             "spill_bytes_total": self.spill_bytes_total,
             "loads": self.loads,
+            "store_rebuilds": self.store_rebuilds,
             "jobs_restored": self.jobs_restored,
+            "retries_total": self.retries_total,
+            "giveups_total": self.giveups_total,
+            "demotions_total": self.demotions_total,
+            "watchdog_restarts": self.watchdog_restarts,
             "iterations_total": self.iterations_total,
             "iterations_per_sec": self.iterations_per_sec(),
             "h2d_bytes_total": self.h2d_bytes_total,

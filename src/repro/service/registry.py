@@ -27,6 +27,7 @@ import dataclasses
 import hashlib
 import os
 import threading
+import weakref
 
 import numpy as np
 
@@ -78,6 +79,10 @@ class TensorHandle:
     pins: int = 0                # live plans referencing blco/chunks/store
     store_path: str | None = None   # persistent copy (spill tier)
     last_used: int = 0           # registry LRU clock at last touch
+    build: BuildParams | None = None    # rebuild recipe (self-heal)
+    source_ref: weakref.ref | None = None  # weakref to the source COO
+    quarantined: bool = False    # store copy corrupt + unrebuildable
+    quarantine_reason: str | None = None
 
     def pin(self) -> None:
         """A plan now references this handle (blocks evict/spill)."""
@@ -161,6 +166,7 @@ class TensorRegistry:
         self.spills = 0
         self.spill_bytes = 0         # host bytes freed by spilling
         self.loads = 0               # un-spills (store -> host reloads)
+        self.rebuilds = 0            # corrupt store files healed from COO
 
     # ---------------------------------------------------------------- paths
     def _store_file(self, key: str) -> str:
@@ -205,6 +211,8 @@ class TensorRegistry:
                     else:
                         self.hits += 1
                         self.disk_hits += 1
+                        handle.build = build
+                        handle.source_ref = weakref.ref(t)
                         return handle
             self.misses += 1
             blco = build_blco(t, target_bits=build.target_bits,
@@ -214,7 +222,8 @@ class TensorRegistry:
             handle = TensorHandle(
                 key=key, dims=t.dims, nnz=t.nnz,
                 norm_x=float(np.linalg.norm(t.values.astype(np.float64))),
-                blco=blco, spec=spec, chunks=LaunchChunks(blco, spec.nnz))
+                blco=blco, spec=spec, chunks=LaunchChunks(blco, spec.nnz),
+                build=build, source_ref=weakref.ref(t))
             self._cache[key] = handle
             self._touch(handle)
             self._maybe_spill()
@@ -322,22 +331,59 @@ class TensorRegistry:
         same blocks/launches/reservation, no re-construction — so a
         load-after-spill (or after a process restart) is bit-identical to
         the original registration.
+
+        Self-heal: the reload verifies section checksums.  On corruption,
+        when the source COO is still alive (``source_ref``), the BLCO is
+        rebuilt from it with the recorded build params and re-persisted
+        over the damaged file — bit-identical to the original build
+        because ``build_blco`` is deterministic.  Without a live source
+        the handle is *quarantined* (new jobs are refused with the
+        reason) and the corruption error propagates.
         """
         with self._lock:
             handle = self._require(key)
             self._touch(handle)
             if handle.resident:
                 return handle
-            from repro.store import open_blco
+            from repro.store import StoreCorruptionError, open_blco
             with obs_trace.span("registry.load", "registry", key=key,
                                 nnz=handle.nnz):
-                with open_blco(handle.store_path) as stored:
-                    handle.blco = stored.to_blco()
+                try:
+                    with open_blco(handle.store_path, verify=True) as stored:
+                        handle.blco = stored.to_blco()
+                except StoreCorruptionError as exc:
+                    self._self_heal(handle, exc)
                 handle.chunks = LaunchChunks(handle.blco, handle.spec.nnz)
             self.loads += 1
             self._touch(handle)           # the reload makes it MRU
             self._maybe_spill(keep=handle)
             return handle
+
+    def _self_heal(self, handle: TensorHandle,
+                   exc: BaseException) -> None:
+        """Corrupt store file: rebuild from the live COO or quarantine."""
+        source = handle.source_ref() if handle.source_ref is not None \
+            else None
+        if source is None or handle.build is None:
+            handle.quarantined = True
+            handle.quarantine_reason = (
+                f"store file {handle.store_path} failed verification and "
+                f"no source tensor survives to rebuild from: {exc}")
+            raise exc
+        with obs_trace.span("registry.rebuild", "registry", key=handle.key,
+                            nnz=handle.nnz, error=repr(exc)):
+            build = handle.build
+            blco = build_blco(source, target_bits=build.target_bits,
+                              max_nnz_per_block=build.max_nnz_per_block,
+                              launch_nnz_budget=build.launch_nnz_budget)
+            from repro.store import save_blco
+            save_blco(blco, handle.store_path,
+                      reservation_nnz=handle.spec.nnz,
+                      fingerprint=handle.key, norm_x=handle.norm_x)
+            handle.blco = blco
+            handle.quarantined = False
+            handle.quarantine_reason = None
+            self.rebuilds += 1
 
     def _maybe_spill(self, keep: TensorHandle | None = None) -> None:
         """LRU: spill least-recently-used unpinned handles over the budget.

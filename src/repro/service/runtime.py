@@ -28,9 +28,12 @@ from __future__ import annotations
 
 import asyncio
 import dataclasses
+import os
 import queue
 import threading
 import time
+
+from repro.core.cp_als import cp_als_init
 
 from . import scheduler as sched
 from .api import (CancelJob, CancelResult, DecompositionResult,
@@ -46,8 +49,10 @@ class JobEvent:
     """One streamed status snapshot of one job.
 
     ``kind`` is the edge that produced it: ``queued`` / ``admitted`` /
-    ``iteration`` (one completed ALS sweep) / ``weight`` / ``done`` /
-    ``failed`` / ``cancelled``.  ``fits`` is the fit trajectory up to and
+    ``demoted`` (the plan took a degradation-ladder rung) / ``iteration``
+    (one completed ALS sweep) / ``weight`` / ``rollback`` (the watchdog
+    rewound a mid-sweep job after a worker crash) / ``done`` / ``failed``
+    / ``cancelled``.  ``fits`` is the fit trajectory up to and
     including this event, so a late subscriber's first iteration event
     still carries the whole history (note this makes publishing a job's
     full event stream O(iterations^2) in copied floats — fine at ALS
@@ -123,13 +128,36 @@ class ServiceRuntime:
     and may be called from any thread (or, via the ``async`` helpers, any
     asyncio event loop).  Constructor kwargs other than ``service`` are
     forwarded to ``DecompositionService`` when no service is given.
+
+    **Watchdog** (``watchdog=True``): a crash that escapes the worker
+    (observer bugs, injected ``runtime.quantum:crash`` worker death) is
+    *recovered* instead of hanging the service — the in-flight job's
+    ``CPState`` is rolled back to the last completed sweep (the
+    auto-snapshot checkpoint, else the deterministic fresh init) and a
+    replacement worker thread is started, up to ``max_restarts`` times.
+    Beyond the cap — a persistently failing worker — the legacy fail-stop
+    path runs: the error is recorded, feeds close, and every
+    ``drain()``/``wait()`` caller gets ``RuntimeError('service runtime
+    worker failed')`` instead of a hang.  ``auto_snapshot_dir`` (with
+    ``auto_snapshot_every`` quanta) enables periodic snapshots at quantum
+    boundaries, bounding how many sweeps a rollback can lose.
     """
 
-    def __init__(self, service: DecompositionService | None = None,
+    def __init__(self, service: DecompositionService | None = None, *,
+                 watchdog: bool = True, max_restarts: int = 3,
+                 auto_snapshot_dir: str | None = None,
+                 auto_snapshot_every: int = 8,
                  **service_kwargs):
         self.service = service if service is not None \
             else DecompositionService(**service_kwargs)
         self.scheduler = self.service.scheduler
+        self._watchdog = watchdog
+        self._max_restarts = max_restarts
+        self._restarts = 0
+        self._auto_snapshot_dir = auto_snapshot_dir
+        self._auto_snapshot_every = max(1, auto_snapshot_every)
+        self._quanta_since_snapshot = 0
+        self._auto_snapshot_failures = 0
         self._lock = threading.RLock()
         self._work = threading.Condition(self._lock)    # new work / stop
         self._idle = threading.Condition(self._lock)    # queue fully drained
@@ -193,20 +221,111 @@ class ServiceRuntime:
                     # ONE quantum under the lock: control actions (submit /
                     # cancel / set_weight) interleave only between ALS sweeps
                     self.scheduler.step()
+                    self._maybe_auto_snapshot()
                 # lock released: sleep a moment so blocked control threads
                 # can actually acquire it (releasing and immediately
                 # re-acquiring would convoy them out for many sweeps)
                 time.sleep(_YIELD_S)
         except BaseException as exc:      # noqa: BLE001 — job isolation is
             # step()'s business; anything escaping it (admission failures,
-            # observer bugs) must not silently kill the worker and hang
-            # every drain()/wait() caller — record it and close the feeds
+            # observer bugs) kills this worker thread — the watchdog rolls
+            # the in-flight job back and starts a replacement.  A disabled
+            # or exhausted watchdog must not silently hang every
+            # drain()/wait() caller — record the error and close the feeds
+            if self._recover(exc):
+                return
             with self._lock:
                 self._error = exc
                 self._idle.notify_all()
                 for feed in self._feeds:
                     feed.close()
                 self._feeds.clear()
+
+    # ------------------------------------------------------------- watchdog
+    def _recover(self, exc: BaseException) -> bool:
+        """Restart the worker after a crash; False means stay dead.
+
+        Runs on the dying worker thread.  The in-flight job (if any) is
+        rolled back to its last completed sweep, then a replacement
+        thread takes over the drive loop.  Refuses when the watchdog is
+        off, the restart budget is spent, or ``stop()`` already swapped
+        the thread handle out (a racing shutdown wins).
+        """
+        with self._lock:
+            if not self._watchdog or self._stop \
+                    or self._restarts >= self._max_restarts:
+                return False
+            if self._thread is not threading.current_thread():
+                return False              # stop() owns the handle now
+            self._restarts += 1
+            self.service.metrics.watchdog_restarts += 1
+            self._rollback_inflight()
+            thread = threading.Thread(target=self._drive,
+                                      name="service-runtime", daemon=True)
+            self._thread = thread
+        thread.start()
+        return True
+
+    def _rollback_inflight(self) -> None:
+        """Rewind the job whose quantum the crash interrupted (lock held).
+
+        ``scheduler.stepping``/``in_sweep`` say whether a ``cp_als_step``
+        was mid-flight — its in-place factor mutations may be partial, so
+        the ``CPState`` is replaced by the last auto-snapshot checkpoint
+        when one exists, else by the deterministic fresh init.  Either
+        way the replay is bit-identical to an uninterrupted run at every
+        completed sweep; only wasted sweeps differ.  A crash *between*
+        sweeps (``in_sweep`` False) needs no rollback — the state is a
+        complete iteration already.
+        """
+        jid, mid_sweep = self.scheduler.stepping, self.scheduler.in_sweep
+        self.scheduler.stepping = None
+        self.scheduler.in_sweep = False
+        if jid is None:
+            return
+        job = self.scheduler.jobs.get(jid)
+        if job is None or job.state != sched.RUNNING or job.cp is None:
+            return
+        if mid_sweep:
+            job.cp = self._checkpointed_cp(job) or cp_als_init(
+                job.handle.dims, job.rank, norm_x=job.handle.norm_x,
+                tol=job.tol, seed=job.seed)
+            job.metrics.iterations = job.cp.iteration
+            self.scheduler._publish(job, "rollback")
+
+    def _checkpointed_cp(self, job: sched.Job):
+        """The job's CPState from the latest auto-snapshot, or None."""
+        if self._auto_snapshot_dir is None:
+            return None
+        path = os.path.join(self._auto_snapshot_dir,
+                            f"job_{job.job_id}.npz")
+        if not os.path.exists(path):
+            return None
+        from repro.store.snapshot import _load_cp
+        try:
+            return _load_cp(path, job.handle.dims, job.rank)
+        except Exception:     # noqa: BLE001 — a damaged checkpoint (crash
+            return None       # mid-write) degrades to the fresh-init path
+
+    def _maybe_auto_snapshot(self) -> None:
+        """Periodic snapshot at the quantum boundary.
+
+        Failures are counted, not raised — a full disk must not kill the
+        worker the watchdog exists to protect.  The caller (``_drive``)
+        already holds the lock; the re-entrant re-acquire makes that
+        lexical.
+        """
+        if self._auto_snapshot_dir is None:
+            return
+        with self._lock:
+            self._quanta_since_snapshot += 1
+            if self._quanta_since_snapshot < self._auto_snapshot_every:
+                return
+            self._quanta_since_snapshot = 0
+            try:
+                self.service.snapshot(self._auto_snapshot_dir)
+            except Exception:   # noqa: BLE001 — snapshot is best-effort here
+                self._auto_snapshot_failures += 1
 
     def _check_worker(self) -> None:
         # callers reach here from outside the lock too (wait/stream error
@@ -278,7 +397,7 @@ class ServiceRuntime:
         the time they are recorded, so a mid-sweep export never blocks on
         (or is blocked by) an in-flight quantum.
         """
-        return self.service.trace(req)
+        return self.service.trace(req)  # repro-lint: disable=lock-discipline
 
     def subscribe(self, job_id: int | None = None) -> StatusFeed:
         """A feed of subsequent events (all jobs, or one job).

@@ -35,11 +35,16 @@ uses to stream per-iteration status without polling.
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import Callable
 
+import jax.numpy as jnp
+
 from repro.analysis import sanitize as _san
 from repro.core.cp_als import CPState, cp_als_init, cp_als_step
+from repro.faults import inject as faults
+from repro.faults.retry import is_transient
 from repro.obs import trace as obs_trace
 
 from .executor import ServiceEngine
@@ -59,6 +64,38 @@ TERMINAL_STATES = (DONE, FAILED, CANCELLED)
 STRIDE1 = float(1 << 20)
 
 
+class FactorPoisonError(RuntimeError):
+    """The always-on quantum-boundary guard: a sweep produced a non-finite
+    fit, meaning the job's factor matrices are poisoned (NaN/Inf).  The
+    job quarantines FAILED; other tenants are unaffected."""
+
+
+def _poison_factors(job: "Job") -> None:
+    """The ``factors.nan`` injection: corrupt a factor matrix in place the
+    way a buggy kernel or bad input data would.
+
+    Poisons a factor the coming sweep *reads* before overwriting (factor 1
+    when the tensor has one: mode 0's MTTKRP consumes factors 1..N-1), so
+    the NaN propagates through the sweep into the fit that the always-on
+    quantum-boundary guard checks.
+    """
+    i = 1 if len(job.cp.factors) > 1 else 0
+    f = job.cp.factors[i].at[0, 0].set(jnp.nan)
+    job.cp.factors[i] = f
+    job.cp.grams[i] = f.T @ f
+
+
+def _error_payload(exc: BaseException, *, where: str) -> dict:
+    """The explanatory payload a quarantined (FAILED) job carries."""
+    return {
+        "type": type(exc).__name__,
+        "message": str(exc),
+        "where": where,
+        "transient": is_transient(exc),
+        "injected": str(exc).startswith("[fault-injection]"),
+    }
+
+
 @dataclasses.dataclass
 class Job:
     job_id: int
@@ -74,6 +111,7 @@ class Job:
     cp: CPState | None = None
     metrics: JobMetrics = dataclasses.field(default_factory=JobMetrics)
     error: str | None = None
+    error_payload: dict | None = None     # quarantine explanation (FAILED)
     plan: object | None = None            # ExecutionPlan once admitted
     mttkrp_fn: Callable | None = None     # test/override hook; default = plan
 
@@ -107,6 +145,11 @@ class JobScheduler:
         self.active: list[int] = []           # admission order
         self.trace: list[int] = []            # job id per executed iteration
         self.observers: list[Callable[[Job, str], None]] = []
+        # watchdog bookkeeping: the job whose quantum is in flight, and
+        # whether its CPState may be mid-sweep (partially mutated) — read
+        # by the runtime's crash-recovery path to decide on a rollback
+        self.stepping: int | None = None
+        self.in_sweep: bool = False
 
     # -------------------------------------------------------------- events
     def _publish(self, job: Job, kind: str) -> None:
@@ -154,46 +197,122 @@ class JobScheduler:
         self._admit()
         return job.job_id
 
+    def adopt_finished(self, handle: TensorHandle, *, rank: int, iters: int,
+                       tol: float, seed: int, tenant: str, weight: float,
+                       cp_state: CPState | None, job_id: int,
+                       state: str = DONE, error: str | None = None,
+                       error_payload: dict | None = None) -> int:
+        """Install a terminal job record under its original id.
+
+        The snapshot-restore hook for DONE/FAILED jobs: no admission, no
+        plan, no events — the record only serves ``status()``/``result()``
+        for job ids that finished before the restart.
+        """
+        _san.assert_scheduler_guard(self, "scheduler.adopt_finished")
+        if state not in TERMINAL_STATES:
+            raise ValueError(f"adopt_finished takes a terminal state, "
+                             f"got {state!r}")
+        if job_id in self.jobs:
+            raise ValueError(f"job id {job_id} already exists")
+        job = Job(job_id=job_id, handle=handle, rank=rank, iters=iters,
+                  tol=tol, seed=seed, tenant=tenant, weight=float(weight),
+                  cp=cp_state, state=state, error=error)
+        job.error_payload = error_payload
+        job.metrics.completed_s = time.perf_counter()
+        self._next_id = max(self._next_id, job_id + 1)
+        self.jobs[job_id] = job
+        return job_id
+
     def _admit(self) -> None:
-        """Admit queued jobs FIFO while the measured byte budget allows."""
+        """Admit queued jobs FIFO while the measured byte budget allows.
+
+        Fault paths quarantine instead of crash: a planning exception
+        (corrupt store, unrecoverable alloc failure) fails THAT job and
+        moves on, and any exception between the ledger charge and a fully
+        registered running job releases the charged bytes first — the
+        ledger audit holds on every exit.
+        """
         try:
             while self.pending:
                 if self.max_active is not None and \
                         len(self.active) >= self.max_active:
                     return
                 job = self.jobs[self.pending[0]]
+                if job.handle.quarantined:
+                    self.pending.pop(0)
+                    self._fail_queued(job, RuntimeError(
+                        f"tensor {job.handle.key} is quarantined: "
+                        f"{job.handle.quarantine_reason}"))
+                    continue
                 remaining = self.device_budget_bytes \
                     - self.metrics.admitted_reservation_bytes
-                plan = self.engine.try_plan(job.handle, rank=job.rank,
-                                            budget_remaining=remaining)
+                try:
+                    plan = self.engine.try_plan(job.handle, rank=job.rank,
+                                                budget_remaining=remaining)
+                except Exception as exc:   # noqa: BLE001 — job isolation:
+                    # planning failures are this job's problem, not the
+                    # worker's; nothing was charged yet (try_plan's pool
+                    # joins are exception-safe)
+                    self.pending.pop(0)
+                    self._fail_queued(job, exc)
+                    continue
                 if plan is None:
                     return                   # head-of-line waits; keep FIFO
                 self.pending.pop(0)
                 self.metrics.hold_bytes(plan.device_bytes())
-                job.plan = plan
-                job.state = RUNNING
-                # a newly admitted job enters one quantum past the current
-                # virtual time: it cannot starve tenants already in flight
-                job.pass_value = self._global_pass + job.stride
-                job.metrics.admitted_s = time.perf_counter()
-                job.metrics.backend = plan.backend
-                job.metrics.stats = plan.stats()
-                self.metrics.hist.queue_wait_s.record(
-                    job.metrics.queue_wait_s)
-                if job.cp is None:      # restored jobs carry their CPState
-                    job.cp = cp_als_init(job.handle.dims, job.rank,
-                                         norm_x=job.handle.norm_x,
-                                         tol=job.tol, seed=job.seed)
-                self.active.append(job.job_id)
-                self.metrics.jobs_admitted += 1
-                self._sync_gauges()
-                self._publish(job, "admitted")
+                try:
+                    job.plan = plan
+                    job.state = RUNNING
+                    # a newly admitted job enters one quantum past the
+                    # current virtual time: it cannot starve tenants
+                    # already in flight
+                    job.pass_value = self._global_pass + job.stride
+                    job.metrics.admitted_s = time.perf_counter()
+                    job.metrics.backend = plan.backend
+                    job.metrics.stats = plan.stats()
+                    self.metrics.hist.queue_wait_s.record(
+                        job.metrics.queue_wait_s)
+                    if job.cp is None:  # restored jobs carry their CPState
+                        job.cp = cp_als_init(job.handle.dims, job.rank,
+                                             norm_x=job.handle.norm_x,
+                                             tol=job.tol, seed=job.seed)
+                    self.active.append(job.job_id)
+                    self.metrics.jobs_admitted += 1
+                    if plan.stats().demotions:
+                        self.metrics.demotions_total += \
+                            plan.stats().demotions
+                    self._sync_gauges()
+                    self._publish(job, "admitted")
+                    if plan.stats().demotions:
+                        self._publish(job, "demoted")
+                except BaseException as exc:
+                    # the PR-8 reservation-leak fix: the bytes charged two
+                    # lines up must not outlive a failed registration
+                    self.metrics.hold_bytes(-plan.close())
+                    job.plan = None
+                    if job.job_id in self.active:
+                        self.active.remove(job.job_id)
+                    self._fail_queued(job, exc)
+                    continue
         finally:
             _san.audit_scheduler(self, "scheduler._admit")
 
-    def _retire(self, job: Job, state: str, error: str | None = None) -> None:
+    def _fail_queued(self, job: Job, exc: BaseException,
+                     where: str = "scheduler.admit") -> None:
+        """Quarantine a job that failed before (or during) admission."""
+        job.state = FAILED
+        job.error = repr(exc)
+        job.error_payload = _error_payload(exc, where=where)
+        job.metrics.completed_s = time.perf_counter()
+        self.metrics.jobs_failed += 1
+        self._sync_gauges()
+        self._publish(job, FAILED)
+
+    def _retire(self, job: Job, state: str, error: str | None = None,
+                payload: dict | None = None) -> None:
         job.state = state
         job.error = error
+        job.error_payload = payload
         job.metrics.completed_s = time.perf_counter()
         self.active.remove(job.job_id)
         freed = job.plan.close() if job.plan is not None else 0
@@ -210,6 +329,8 @@ class JobScheduler:
         self.metrics.disk_bytes_total += job.metrics.stats.disk_bytes
         self.metrics.disk_time_s_total += job.metrics.stats.disk_time_s
         self.metrics.launches_total += job.metrics.stats.launches
+        self.metrics.retries_total += job.metrics.stats.retries
+        self.metrics.giveups_total += job.metrics.stats.giveups
         # per-job engine distributions roll up losslessly at retirement
         self.metrics.hist.merge_engine(job.metrics.stats.hist)
         self._sync_gauges()
@@ -293,6 +414,8 @@ class JobScheduler:
         _san.assert_scheduler_guard(self, "scheduler.step")
         job = self._pick()
         if job is not None:
+            self.stepping = job.job_id       # watchdog: quantum in flight
+            self.in_sweep = False
             job.pass_value += job.stride
             backend = job.mttkrp_fn if job.mttkrp_fn is not None else job.plan
             t0 = time.perf_counter()
@@ -300,14 +423,39 @@ class JobScheduler:
                                 job=job.job_id, tenant=job.tenant,
                                 sweep=job.cp.iteration + 1 if job.cp else 0):
                 try:
-                    cp_als_step(backend, job.cp)
+                    kind = faults.fire("runtime.quantum")
+                    if kind is not None:
+                        # "exception" (RuntimeError) is caught right below
+                        # -> job quarantined; "crash" (WorkerCrashError, a
+                        # BaseException) escapes job isolation by design
+                        # -> worker death -> watchdog restart
+                        raise faults.exception_for("runtime.quantum", kind)
+                    if faults.fire("factors.nan") is not None:
+                        _poison_factors(job)
+                    self.in_sweep = True     # factors mutate in place from
+                    cp_als_step(backend, job.cp)        # here to sweep end
+                    self.in_sweep = False
+                    # always-on quantum-boundary NaN guard: the fit is a
+                    # host float the sweep already synchronized on, so the
+                    # check costs one math.isfinite — poisoned factors
+                    # quarantine the job instead of corrupting its result
+                    if job.cp.fits and not math.isfinite(job.cp.fits[-1]):
+                        raise FactorPoisonError(
+                            f"non-finite fit after sweep "
+                            f"{job.cp.iteration}: job {job.job_id}'s factor "
+                            f"matrices are poisoned (NaN/Inf)")
+                    # the sanitizer's deeper (full-matrix) check rides the
+                    # same quarantine path when enabled
+                    _san.check_factors(job.cp.factors,
+                                       f"job {job.job_id} after sweep "
+                                       f"{job.cp.iteration}")
                 except Exception as exc:      # noqa: BLE001 — job isolation:
                     self.metrics.busy_time_s += time.perf_counter() - t0
-                    self._retire(job, FAILED, error=repr(exc))
+                    self._retire(job, FAILED, error=repr(exc),
+                                 payload=_error_payload(
+                                     exc, where="runtime.quantum"))
+                    self.stepping = None
                     return bool(self.active or self.pending)
-            _san.check_factors(job.cp.factors,
-                               f"job {job.job_id} after sweep "
-                               f"{job.cp.iteration}")
             dt = time.perf_counter() - t0
             self.metrics.busy_time_s += dt
             self.metrics.hist.quantum_s.record(dt)
@@ -318,6 +466,7 @@ class JobScheduler:
             self._publish(job, "iteration")
             if job.cp.converged or job.cp.iteration >= job.iters:
                 self._retire(job, DONE)
+            self.stepping = None
         return bool(self.active or self.pending)
 
     def run(self) -> None:

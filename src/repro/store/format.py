@@ -42,6 +42,8 @@ import zlib
 import numpy as np
 
 from repro.core import linearize as lin
+from repro.faults import inject as faults
+from repro.faults.retry import retry_call
 from repro.obs import trace as obs_trace
 from repro.core.blco import BLCOTensor, Block, Launch
 from repro.core.streaming import LaunchChunks, ReservationSpec, reservation_for
@@ -250,7 +252,16 @@ class DiskChunkSource:
 
     def chunk(self, i: int):
         t0 = time.perf_counter()
-        out = self.stored.chunk(i)
+
+        def _read():
+            faults.maybe_fail("store.read")
+            return self.stored.chunk(i)
+
+        # transient read failures (injected OSError or a genuinely flaky
+        # mount) retry with backoff; corruption (StoreCorruptionError) is
+        # permanent and surfaces immediately — re-reading bad bytes does
+        # not help, and the registry's self-heal owns that path
+        out = retry_call(_read, site="store.read", stats=self.stats)
         t1 = time.perf_counter()
         nbytes = (out[0].nbytes + out[1].nbytes
                   + out[2].nbytes + out[3].nbytes)

@@ -32,19 +32,29 @@ from .format import StoreError
 SNAPSHOT_VERSION = 1
 MANIFEST = "manifest.json"
 
-# job states that resume after a restart (terminal jobs' results die with
-# the process; the decomposition itself is cheap to re-request)
+# job states that resume after a restart; terminal states (done/failed)
+# are persisted too — as finished *records* whose results a restarted
+# service keeps serving — but never re-enter admission
 _RESUMABLE = ("queued", "running")
+_PERSISTED = _RESUMABLE + ("done", "failed")
 
 
 def _save_cp(path: str, cp: CPState) -> None:
+    # atomic: write the full npz to a tmp file, then rename over the
+    # destination, so a crash mid-write (or a reader racing an
+    # auto-snapshot) never sees a truncated checkpoint.  The open file
+    # handle matters: np.savez appends ".npz" to suffix-less *paths* but
+    # writes file objects verbatim.
     arrays = {f"factor_{n}": np.asarray(f) for n, f in enumerate(cp.factors)}
-    np.savez(path, lam=np.asarray(cp.lam), fits=np.asarray(cp.fits),
-             prev_fit=np.float64(cp.prev_fit),
-             iteration=np.int64(cp.iteration),
-             converged=np.bool_(cp.converged),
-             norm_x=np.float64(cp.norm_x), tol=np.float64(cp.tol),
-             **arrays)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, lam=np.asarray(cp.lam), fits=np.asarray(cp.fits),
+                 prev_fit=np.float64(cp.prev_fit),
+                 iteration=np.int64(cp.iteration),
+                 converged=np.bool_(cp.converged),
+                 norm_x=np.float64(cp.norm_x), tol=np.float64(cp.tol),
+                 **arrays)
+    os.replace(tmp, path)
 
 
 def _load_cp(path: str, dims, rank: int) -> CPState:
@@ -84,7 +94,7 @@ def snapshot_service(service, path: str) -> dict:
     jobs = []
     needed_keys = set()
     for job in service.scheduler.jobs.values():
-        if job.state not in _RESUMABLE:
+        if job.state not in _PERSISTED:
             continue
         needed_keys.add(job.handle.key)
         if job.cp is not None:
@@ -96,6 +106,7 @@ def snapshot_service(service, path: str) -> dict:
             "state": job.state, "iteration":
                 job.cp.iteration if job.cp is not None else 0,
             "has_cp": job.cp is not None,
+            "error": job.error, "error_payload": job.error_payload,
         })
     tensors = {}
     for key in sorted(needed_keys):
@@ -139,10 +150,21 @@ def restore_service(path: str, service) -> list[int]:
         if rec["has_cp"]:
             cp = _load_cp(os.path.join(path, f"job_{rec['job_id']}.npz"),
                           handle.dims, rec["rank"])
-        job_id = service.scheduler.submit(
-            handle, rank=rec["rank"], iters=rec["iters"], tol=rec["tol"],
-            seed=rec["seed"], weight=rec["weight"], tenant=rec["tenant"],
-            cp_state=cp, job_id=rec["job_id"])
+        if rec.get("state") in _RESUMABLE or "state" not in rec:
+            job_id = service.scheduler.submit(
+                handle, rank=rec["rank"], iters=rec["iters"],
+                tol=rec["tol"], seed=rec["seed"], weight=rec["weight"],
+                tenant=rec["tenant"], cp_state=cp, job_id=rec["job_id"])
+        else:
+            # terminal record: install it directly (no admission) so the
+            # restarted service keeps serving status()/result() for jobs
+            # that finished before the snapshot
+            job_id = service.scheduler.adopt_finished(
+                handle, rank=rec["rank"], iters=rec["iters"],
+                tol=rec["tol"], seed=rec["seed"], weight=rec["weight"],
+                tenant=rec["tenant"], cp_state=cp, job_id=rec["job_id"],
+                state=rec["state"], error=rec.get("error"),
+                error_payload=rec.get("error_payload"))
         restored.append(job_id)
     if hasattr(service, "metrics"):
         service.metrics.jobs_restored += len(restored)

@@ -1,0 +1,276 @@
+"""Seeded chaos soak (PR 8 acceptance): a mixed-tenant workload driven
+through the async runtime under injected faults.
+
+The invariant every scenario asserts: each job either completes
+**bit-identical** to the fault-free reference run (transient faults are
+absorbed by retry/demotion/watchdog) or quarantines FAILED with an
+explanatory ``error_payload`` — never a hang, never a corrupted result,
+never a dead worker, and the admission ledger is fully released at the
+end (audited on every admit/retire edge by the runtime sanitizer).
+"""
+import numpy as np
+import pytest
+
+from repro.analysis.sanitize import set_sanitize
+from repro.core.tensor import SparseTensor
+from repro.faults import FaultPlan, FaultRule, WorkerCrashError, inject
+from repro.service import ServiceRuntime, SubmitDecomposition
+
+RANK = 4
+ITERS = 5
+BUDGET = 64 << 20
+DRAIN_S = 300
+
+# (tensor seed, ALS seed, tenant, weight); jobs 0 and 2 share a tensor,
+# so pooled plan state is exercised under fault load too
+WORKLOAD = ((0, 1, "acme", 1.0), (1, 2, "umbrella", 2.0),
+            (0, 3, "umbrella", 1.0))
+
+
+def _tensor(seed, nnz=200, dim=8):
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(0, dim, size=(nnz, 3)).astype(np.int64)
+    vals = rng.standard_normal(nnz).astype(np.float32)
+    return SparseTensor(indices=idx, values=vals, dims=(dim, dim, dim))
+
+
+def _config(kind, tmp_path):
+    if kind == "mem":
+        return {"device_budget_bytes": BUDGET}
+    # force the disk-streamed regime: a 1-byte host budget spills every
+    # registration to the store, so jobs stream chunks through
+    # store.read and stream.h2d
+    return {"device_budget_bytes": BUDGET,
+            "store_dir": str(tmp_path / "store"), "host_budget_bytes": 1}
+
+
+def _run_workload(tmp_path, config_kind, *, runtime_kwargs=None):
+    """Submit WORKLOAD, drain, and return per-job outcomes + metrics."""
+    out = {}
+    with ServiceRuntime(**(runtime_kwargs or {}),
+                        **_config(config_kind, tmp_path)) as rt:
+        ids = [rt.submit(SubmitDecomposition(
+            tensor=_tensor(ts), rank=RANK, iters=ITERS, tol=0.0, seed=ss,
+            tenant=tenant, weight=weight))
+            for ts, ss, tenant, weight in WORKLOAD]
+        assert rt.drain(timeout=DRAIN_S), "chaos workload failed to drain"
+        for n, jid in enumerate(ids):
+            st = rt.status(jid)
+            if st.state == "done":
+                res = rt.result(jid).result
+                out[n] = ("done", tuple(res.fits),
+                          np.asarray(res.factors[0]), None)
+            else:
+                out[n] = (st.state, None, None, st.error_payload)
+        metrics = rt.service_metrics()
+        worker_dead = rt._error is not None
+    return out, metrics, worker_dead
+
+
+@pytest.fixture(scope="module")
+def references(tmp_path_factory):
+    """Fault-free outcomes per config kind (regimes are bit-identical, but
+    reference against the exact config anyway)."""
+    assert not inject.FAULTS.enabled
+    refs = {}
+    for kind in ("mem", "disk"):
+        out, metrics, dead = _run_workload(
+            tmp_path_factory.mktemp(f"ref-{kind}"), kind)
+        assert not dead
+        assert all(v[0] == "done" for v in out.values())
+        refs[kind] = out
+    return refs
+
+
+@pytest.fixture(autouse=True)
+def _sanitized():
+    """Ledger audit + factor checks on every scenario; no leftover plan."""
+    set_sanitize(True)
+    yield
+    set_sanitize(None)
+    inject.uninstall()
+
+
+def _check_invariants(out, ref, metrics, worker_dead):
+    assert not worker_dead, "worker died and stayed dead"
+    for n, (state, fits, factors, payload) in out.items():
+        if state == "done":
+            assert fits == ref[n][1], f"job {n} diverged from reference"
+            assert np.array_equal(factors, ref[n][2])
+        else:
+            assert state == "failed", f"job {n} ended {state!r}"
+            assert payload is not None
+            assert {"type", "message", "where", "transient",
+                    "injected"} <= set(payload)
+    assert metrics["admitted_reservation_bytes"] == 0   # ledger clean
+    done = sum(1 for v in out.values() if v[0] == "done")
+    failed = sum(1 for v in out.values() if v[0] == "failed")
+    assert done == metrics["jobs_completed"]
+    assert failed == metrics["jobs_failed"]
+
+
+SCENARIOS = {
+    # every store read fails permanently-corrupt: all jobs quarantine
+    "store-corruption": ("disk", [
+        FaultRule("store.read", kind="corrupt", p=1.0)]),
+    # a sprinkle of transient I/O errors: retried, all jobs bit-identical
+    "transient-io": ("disk", [
+        FaultRule("store.read", kind="transient", nth=n)
+        for n in (1, 5, 9)]),
+    # an allocation failure on the first plan attempt: the ladder demotes
+    # in_memory -> host-streamed and every job completes bit-identical
+    # (the disk rung needs a store_dir; tests/test_faults.py covers it)
+    "alloc-failure": ("mem", [FaultRule("plan.alloc", nth=1)]),
+    # transient H2D put failures: retried, bit-identical
+    "h2d-failure": ("disk", [
+        FaultRule("stream.h2d", nth=n) for n in (2, 6)]),
+    # an exception mid-quantum: exactly the struck job quarantines
+    "quantum-exception": ("mem", [
+        FaultRule("runtime.quantum", kind="exception", nth=2)]),
+    # poisoned factors: the always-on NaN guard quarantines the job
+    "nan-poison": ("mem", [FaultRule("factors.nan", nth=3)]),
+    # the worker thread dies mid-run: the watchdog restarts it and every
+    # job still completes bit-identical
+    "worker-death": ("mem", [
+        FaultRule("runtime.quantum", kind="crash", nth=3)]),
+    # everything at once
+    "mixed": ("disk", [
+        FaultRule("store.read", kind="transient", nth=2),
+        FaultRule("plan.alloc", nth=1),
+        FaultRule("stream.h2d", nth=4),
+        FaultRule("factors.nan", nth=6),
+        FaultRule("runtime.quantum", kind="exception", nth=9)]),
+}
+
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_chaos_scenario(name, references, tmp_path):
+    config_kind, rules = SCENARIOS[name]
+    plan = FaultPlan(seed=1234, rules=tuple(rules))
+    with inject.active(plan):
+        out, metrics, dead = _run_workload(tmp_path, config_kind)
+    _check_invariants(out, references[config_kind], metrics, dead)
+
+    failed = sum(1 for v in out.values() if v[0] == "failed")
+    if name == "store-corruption":
+        assert failed == len(WORKLOAD)      # permanent damage, all refused
+    elif name == "transient-io":
+        assert failed == 0 and metrics["retries_total"] >= 3
+    elif name == "alloc-failure":
+        assert failed == 0 and metrics["demotions_total"] >= 1
+    elif name == "h2d-failure":
+        assert failed == 0 and metrics["retries_total"] >= 2
+    elif name in ("quantum-exception", "nan-poison"):
+        assert failed == 1
+        payload = next(v[3] for v in out.values() if v[0] == "failed")
+        if name == "quantum-exception":
+            assert payload["injected"] is True
+        else:
+            # the sanitizer (forced on here) catches the poison first;
+            # without it the always-on finite-fit guard raises
+            # FactorPoisonError — either way the job quarantines
+            assert payload["type"] in ("FactorPoisonError", "SanitizerError")
+            assert "nan" in payload["message"].lower() or \
+                "finite" in payload["message"].lower()
+    elif name == "worker-death":
+        assert failed == 0
+        assert metrics["watchdog_restarts"] == 1
+    elif name == "mixed":
+        assert failed >= 1                  # nan-poison at minimum
+        assert plan.fired_log, "mixed scenario injected nothing"
+    assert metrics["giveups_total"] == 0    # nth-faults never exhaust retry
+
+
+def test_worker_crash_mid_sweep_resumes_exactly(references, tmp_path):
+    """Kill the worker INSIDE a sweep (partial in-place factor mutation):
+    the watchdog rolls the job back to its last completed sweep and the
+    final trajectory is bit-identical to the fault-free run."""
+    ref = references["mem"]
+    events = []
+    with ServiceRuntime(**_config("mem", tmp_path)) as rt:
+        feed = rt.subscribe()
+        jid = rt.submit(SubmitDecomposition(
+            tensor=_tensor(0), rank=RANK, iters=ITERS, tol=0.0, seed=1,
+            tenant="acme"))
+        with rt._lock:
+            job = rt.scheduler.jobs[jid]
+            plan, bombed = job.plan, {"done": False}
+
+            def bomb(factors, mode):
+                if job.cp.iteration >= 2 and mode == 1 and not bombed["done"]:
+                    bombed["done"] = True
+                    raise WorkerCrashError("simulated segfault mid-sweep")
+                return plan.mttkrp(factors, mode)
+
+            job.mttkrp_fn = bomb
+        st = rt.wait(jid, timeout=DRAIN_S)
+        assert st.state == "done"
+        fits = tuple(rt.result(jid).result.fits)
+        factors = np.asarray(rt.result(jid).result.factors[0])
+        m = rt.service_metrics()
+        while True:
+            ev = feed.get(timeout=0.1)
+            if ev is None:
+                break
+            events.append(ev.kind)
+    assert bombed["done"], "the mid-sweep bomb never detonated"
+    assert m["watchdog_restarts"] == 1
+    assert "rollback" in events             # the rewind was announced
+    assert fits == ref[0][1]                # bit-identical despite the crash
+    assert np.array_equal(factors, ref[0][2])
+
+
+def test_worker_crash_resumes_from_auto_snapshot(tmp_path):
+    """With auto-snapshots enabled, a mid-sweep crash rolls back to the
+    checkpoint (not to iteration 0) and still finishes bit-identically."""
+    store = str(tmp_path / "store")
+    snap = str(tmp_path / "autosnap")
+    with ServiceRuntime(device_budget_bytes=BUDGET,
+                        store_dir=store) as rt:
+        jid = rt.submit(SubmitDecomposition(
+            tensor=_tensor(0), rank=RANK, iters=ITERS, tol=0.0, seed=1))
+        rt.wait(jid, timeout=DRAIN_S)
+        ref_fits = tuple(rt.result(jid).result.fits)
+
+    with ServiceRuntime(device_budget_bytes=BUDGET, store_dir=store,
+                        auto_snapshot_dir=snap,
+                        auto_snapshot_every=1) as rt:
+        jid = rt.submit(SubmitDecomposition(
+            tensor=_tensor(0), rank=RANK, iters=ITERS, tol=0.0, seed=1))
+        with rt._lock:
+            job = rt.scheduler.jobs[jid]
+            plan, bombed = job.plan, {"done": False}
+
+            def bomb(factors, mode):
+                if job.cp.iteration >= 3 and mode == 1 and not bombed["done"]:
+                    bombed["done"] = True
+                    raise WorkerCrashError("simulated segfault mid-sweep")
+                return plan.mttkrp(factors, mode)
+
+            job.mttkrp_fn = bomb
+        st = rt.wait(jid, timeout=DRAIN_S)
+        assert st.state == "done"
+        fits = tuple(rt.result(jid).result.fits)
+        m = rt.service_metrics()
+        rolled_back_to = rt.scheduler.jobs[jid].cp.iteration
+    assert bombed["done"]
+    assert m["watchdog_restarts"] == 1
+    assert fits == ref_fits
+    assert rolled_back_to == ITERS
+
+
+def test_watchdog_cap_surfaces_persistent_failure(tmp_path):
+    """A worker that dies every quantum exhausts max_restarts and the
+    legacy fail-stop contract still holds: callers get a typed error,
+    never a hang."""
+    plan = FaultPlan(seed=0, rules=(
+        FaultRule("runtime.quantum", kind="crash", p=1.0),))
+    with inject.active(plan):
+        with ServiceRuntime(device_budget_bytes=BUDGET,
+                            max_restarts=2) as rt:
+            rt.submit(SubmitDecomposition(
+                tensor=_tensor(0), rank=RANK, iters=ITERS, tol=0.0,
+                seed=1))
+            with pytest.raises(RuntimeError, match="worker failed"):
+                rt.drain(timeout=DRAIN_S)
+            assert rt.service.metrics.watchdog_restarts == 2

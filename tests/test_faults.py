@@ -1,0 +1,443 @@
+"""Fault-injection harness: spec parsing, per-site taxonomy, retry layer,
+degradation ladder, quarantine, registry self-heal, and the
+reservation-leak regression (PR 8)."""
+import gc
+import os
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.sanitize import set_sanitize
+from repro.core.blco import build_blco
+from repro.core.tensor import SparseTensor
+from repro.engine import plan_for
+from repro.faults import (FaultPlan, FaultRule, FaultSpecError, Permanent,
+                          RetryPolicy, Transient, inject, is_transient,
+                          retry_call)
+from repro.service import DecompositionService, SubmitDecomposition
+from repro.service.registry import BuildParams, TensorRegistry
+from repro.store import DiskStreamedPlan, StoreCorruptionError
+
+RANK = 4
+BUDGET = 64 << 20
+
+
+def _tensor(seed=0, nnz=200, dim=8):
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(0, dim, size=(nnz, 3)).astype(np.int64)
+    vals = rng.standard_normal(nnz).astype(np.float32)
+    return SparseTensor(indices=idx, values=vals, dims=(dim, dim, dim))
+
+
+def _factors(dims, rank=RANK):
+    return [jnp.ones((d, rank), jnp.float32) for d in dims]
+
+
+@pytest.fixture(autouse=True)
+def _no_leftover_plan():
+    yield
+    inject.uninstall()
+
+
+# ------------------------------------------------------------ spec parsing
+def test_spec_round_trip():
+    plan = FaultPlan.from_spec(
+        "7:store.read@p=0.3:transient;plan.alloc@n=1;stream.h2d@n=2,times=1")
+    assert plan.seed == 7
+    assert [r.site for r in plan.rules] == \
+        ["store.read", "plan.alloc", "stream.h2d"]
+    assert plan.rules[0].p == pytest.approx(0.3)
+    assert plan.rules[1].kind == "alloc"          # site default kind
+    assert plan.rules[2].nth == 2 and plan.rules[2].times == 1
+
+
+@pytest.mark.parametrize("spec,match", [
+    ("no-seed-prefix", "seed"),
+    ("1:", "no rules"),
+    ("1:not.a.site@n=1", "unknown fault site"),
+    ("1:store.read@n=1:explode", "no fault kind"),
+    ("1:store.read@n=1,p=0.5", "exactly one"),
+    ("1:store.read", "exactly one"),
+    ("1:store.read@p=2.0", "p must be"),
+    ("1:store.read@n=0", "n must be"),
+    ("1:store.read@bogus=3", "unknown qualifier"),
+])
+def test_spec_errors(spec, match):
+    with pytest.raises(FaultSpecError, match=match):
+        FaultPlan.from_spec(spec)
+
+
+def test_env_reload(monkeypatch):
+    monkeypatch.setenv(inject.ENV_VAR, "3:plan.alloc@n=1")
+    plan = inject.reload_from_env()
+    assert plan is not None and inject.FAULTS.enabled
+    monkeypatch.setenv(inject.ENV_VAR, "")
+    assert inject.reload_from_env() is None
+    assert not inject.FAULTS.enabled
+
+
+def test_nth_rule_fires_exactly_once():
+    plan = FaultPlan(seed=0, rules=(FaultRule("stream.h2d", nth=2),))
+    with inject.active(plan):
+        assert inject.fire("stream.h2d") is None
+        assert inject.fire("stream.h2d") == "transient"
+        assert inject.fire("stream.h2d") is None
+    assert plan.fired_log == [("stream.h2d", "transient", 2)]
+
+
+def test_probabilistic_rule_is_seed_deterministic():
+    def run(seed):
+        plan = FaultPlan(seed=seed, rules=(
+            FaultRule("store.read", p=0.5, kind="transient"),))
+        return [plan.fire("store.read") for _ in range(32)]
+    assert run(11) == run(11)
+    assert run(11) != run(12)      # astronomically unlikely to collide
+
+
+def test_undeclared_site_raises_when_enabled():
+    with inject.active(FaultPlan(seed=0, rules=(
+            FaultRule("store.read", nth=1),))):
+        with pytest.raises(FaultSpecError, match="undeclared"):
+            # repro-lint: disable=fault-site-hygiene
+            inject.fire("store.raed")
+
+
+def test_disabled_probe_is_cheap_and_inert():
+    assert not inject.FAULTS.enabled
+    assert inject.fire("store.read") is None
+    inject.maybe_fail("plan.alloc")            # no-op, no raise
+    # the <1% overhead claim, reduced to its mechanism: a disabled probe
+    # is one flag read.  At a handful of probes per ALS sweep (>= ms
+    # each), sub-microsecond probes are noise.
+    n = 20000
+    t0 = time.perf_counter()
+    for _ in range(n):
+        inject.fire("store.read")
+    per_call = (time.perf_counter() - t0) / n
+    assert per_call < 5e-6
+
+
+# -------------------------------------------------------------- retry layer
+def test_retry_absorbs_transients_and_counts():
+    calls = {"n": 0}
+
+    class Stats:
+        retries = 0
+        giveups = 0
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise OSError("flaky")
+        return "ok"
+
+    stats = Stats()
+    policy = RetryPolicy(attempts=4, base_delay_s=0.0, max_delay_s=0.0)
+    assert retry_call(flaky, site="t", policy=policy, stats=stats,
+                      sleep=lambda s: None) == "ok"
+    assert stats.retries == 2 and stats.giveups == 0
+
+
+def test_retry_gives_up_and_reraises():
+    class Stats:
+        retries = 0
+        giveups = 0
+
+    stats = Stats()
+    policy = RetryPolicy(attempts=3, base_delay_s=0.0, max_delay_s=0.0)
+
+    def always():
+        raise TimeoutError("down")
+
+    with pytest.raises(TimeoutError):
+        retry_call(always, site="t", policy=policy, stats=stats,
+                   sleep=lambda s: None)
+    assert stats.retries == 2 and stats.giveups == 1
+
+
+def test_retry_permanent_fails_fast():
+    calls = {"n": 0}
+
+    def broken():
+        calls["n"] += 1
+        raise Permanent("no point")
+
+    with pytest.raises(Permanent):
+        retry_call(broken, site="t", sleep=lambda s: None)
+    assert calls["n"] == 1
+
+
+def test_transient_taxonomy():
+    assert is_transient(OSError("x"))
+    assert is_transient(TimeoutError("x"))
+    assert is_transient(Transient("x"))
+    assert not is_transient(ValueError("x"))
+    assert not is_transient(StoreCorruptionError("x"))
+    assert not is_transient(Permanent("x"))
+
+
+# ------------------------------------------------------- per-site taxonomy
+def test_store_read_transient_is_retried(tmp_path):
+    blco = build_blco(_tensor())
+    plan_ = FaultPlan(seed=3, rules=(
+        FaultRule("store.read", kind="transient", nth=1),))
+    with inject.active(plan_):
+        p = DiskStreamedPlan.spill(blco, str(tmp_path / "t.blco"),
+                                   delete_on_close=True)
+        p.mttkrp(_factors(blco.dims), 0)
+        st = p.stats()
+        p.close()
+    assert st.retries >= 1 and st.giveups == 0
+
+
+def test_store_read_corruption_is_permanent(tmp_path):
+    blco = build_blco(_tensor())
+    plan_ = FaultPlan(seed=3, rules=(
+        FaultRule("store.read", kind="corrupt", nth=1),))
+    with inject.active(plan_):
+        p = DiskStreamedPlan.spill(blco, str(tmp_path / "t.blco"),
+                                   delete_on_close=True)
+        with pytest.raises(StoreCorruptionError):
+            p.mttkrp(_factors(blco.dims), 0)
+        st = p.stats()
+        p.close()
+    assert st.retries == 0        # permanent faults are not retried
+
+
+def test_alloc_failure_walks_the_ladder():
+    blco = build_blco(_tensor())
+    with inject.active(FaultPlan(seed=0, rules=(
+            FaultRule("plan.alloc", nth=1),))):
+        p = plan_for(blco, BUDGET, rank=RANK)
+    assert p.backend == "streamed" and p.stats().demotions == 1
+    p.close()
+    with inject.active(FaultPlan(seed=0, rules=(
+            FaultRule("plan.alloc", nth=1), FaultRule("plan.alloc", nth=2)))):
+        p = plan_for(blco, BUDGET, rank=RANK)
+    assert p.backend == "disk_streamed" and p.stats().demotions == 2
+    out = p.mttkrp(_factors(blco.dims), 0)      # demoted plan still computes
+    assert out.shape == (blco.dims[0], RANK)
+    p.close()
+
+
+def test_explicit_backend_never_demotes():
+    blco = build_blco(_tensor())
+    with inject.active(FaultPlan(seed=0, rules=(
+            FaultRule("plan.alloc", nth=1),))):
+        with pytest.raises(inject.AllocationError):
+            plan_for(blco, BUDGET, rank=RANK, backend="streamed")
+
+
+def test_kernel_failure_falls_back_to_xla():
+    blco = build_blco(_tensor())
+    with inject.active(FaultPlan(seed=0, rules=(
+            FaultRule("plan.alloc", kind="kernel", nth=1),))):
+        p = plan_for(blco, BUDGET, rank=RANK, kernel="pallas")
+    assert p.stats().demotions == 1
+    ref = plan_for(blco, BUDGET, rank=RANK, kernel="xla")
+    np.testing.assert_array_equal(
+        np.asarray(p.mttkrp(_factors(blco.dims), 0)),
+        np.asarray(ref.mttkrp(_factors(blco.dims), 0)))
+    p.close()
+    ref.close()
+
+
+def test_kernel_failure_on_xla_propagates():
+    blco = build_blco(_tensor())
+    with inject.active(FaultPlan(seed=0, rules=(
+            FaultRule("plan.alloc", kind="kernel", nth=1),))):
+        with pytest.raises(inject.KernelFailure):
+            plan_for(blco, BUDGET, rank=RANK, kernel="xla")
+
+
+def test_h2d_transient_is_retried_bit_identical():
+    blco = build_blco(_tensor())
+    ref = plan_for(blco, BUDGET, rank=RANK, backend="streamed")
+    want = np.asarray(ref.mttkrp(_factors(blco.dims), 0))
+    ref.close()
+    with inject.active(FaultPlan(seed=4, rules=(
+            FaultRule("stream.h2d", nth=1),))):
+        p = plan_for(blco, BUDGET, rank=RANK, backend="streamed")
+        got = np.asarray(p.mttkrp(_factors(blco.dims), 0))
+        st = p.stats()
+        p.close()
+    assert st.retries >= 1
+    np.testing.assert_array_equal(got, want)
+
+
+def test_quantum_exception_quarantines_job_only():
+    svc = DecompositionService(device_budget_bytes=BUDGET)
+    with inject.active(FaultPlan(seed=0, rules=(
+            FaultRule("runtime.quantum", kind="exception", nth=1),))):
+        bad = svc.submit(SubmitDecomposition(tensor=_tensor(), rank=RANK,
+                                             iters=3, tenant="a"))
+        good = svc.submit(SubmitDecomposition(tensor=_tensor(seed=1),
+                                              rank=RANK, iters=3,
+                                              tenant="b"))
+        svc.run()
+    st = svc.status(bad)
+    assert st.state == "failed"
+    assert st.error_payload["injected"] is True
+    assert st.error_payload["where"] == "runtime.quantum"
+    assert svc.status(good).state == "done"
+    m = svc.service_metrics()
+    assert m["jobs_failed"] == 1 and m["jobs_completed"] == 1
+    assert m["admitted_reservation_bytes"] == 0    # ledger fully released
+
+
+def test_nan_poison_tripped_by_always_on_guard():
+    svc = DecompositionService(device_budget_bytes=BUDGET)
+    with inject.active(FaultPlan(seed=0, rules=(
+            FaultRule("factors.nan", nth=2),))):
+        jid = svc.submit(SubmitDecomposition(tensor=_tensor(), rank=RANK,
+                                             iters=5))
+        svc.run()
+    st = svc.status(jid)
+    assert st.state == "failed"
+    assert st.error_payload["type"] == "FactorPoisonError"
+    assert "poisoned" in st.error_payload["message"]
+    assert svc.service_metrics()["admitted_reservation_bytes"] == 0
+
+
+# ------------------------------------------------- reservation-leak (PR 8)
+def test_admission_failure_releases_charged_bytes():
+    """Regression: an exception between the ledger charge and a fully
+    registered running job must release the charged bytes (audited by the
+    sanitizer ledger check on every admission edge)."""
+    set_sanitize(True)
+    try:
+        svc = DecompositionService(device_budget_bytes=BUDGET)
+        boom = {"armed": True}
+
+        def bomb(job, kind):
+            if kind == "admitted" and boom["armed"]:
+                boom["armed"] = False
+                raise RuntimeError("observer exploded mid-admission")
+
+        svc.scheduler.observers.append(bomb)
+        jid = svc.submit(SubmitDecomposition(tensor=_tensor(), rank=RANK,
+                                             iters=2))
+        st = svc.status(jid)
+        assert st.state == "failed"
+        assert st.error_payload["where"] == "scheduler.admit"
+        m = svc.service_metrics()
+        assert m["admitted_reservation_bytes"] == 0      # no leaked charge
+        # the budget is genuinely reusable: the next job admits and runs
+        ok = svc.submit(SubmitDecomposition(tensor=_tensor(seed=1),
+                                            rank=RANK, iters=2))
+        svc.run()
+        assert svc.status(ok).state == "done"
+        assert svc.service_metrics()["admitted_reservation_bytes"] == 0
+    finally:
+        set_sanitize(None)
+
+
+def test_planning_alloc_fault_fails_job_not_worker():
+    """plan.alloc failures that survive every ladder rung quarantine the
+    job; the ledger stays clean and later submissions are unaffected."""
+    set_sanitize(True)
+    try:
+        svc = DecompositionService(device_budget_bytes=BUDGET)
+        # fail the resident, streamed, and (absent) disk rungs: no
+        # store_path, so after the streamed rung the failure surfaces
+        rules = tuple(FaultRule("plan.alloc", nth=n) for n in (1, 2, 3))
+        with inject.active(FaultPlan(seed=0, rules=rules)):
+            jid = svc.submit(SubmitDecomposition(tensor=_tensor(),
+                                                 rank=RANK, iters=2))
+        st = svc.status(jid)
+        assert st.state == "failed"
+        assert st.error_payload["injected"] is True
+        assert svc.service_metrics()["admitted_reservation_bytes"] == 0
+        ok = svc.submit(SubmitDecomposition(tensor=_tensor(seed=1),
+                                            rank=RANK, iters=2))
+        svc.run()
+        assert svc.status(ok).state == "done"
+    finally:
+        set_sanitize(None)
+
+
+# ------------------------------------------------------ registry self-heal
+def _corrupt(path):
+    """Flip one byte inside the ``vals`` section (sections are page-
+    aligned, so an arbitrary offset would likely hit dead padding)."""
+    import json
+    with open(path, "rb") as f:
+        fixed = f.read(20)
+        hlen = int(np.frombuffer(fixed[12:16], np.uint32)[0])
+        sec = json.loads(f.read(hlen))["sections"]["vals"]
+    off = sec["offset"] + sec["nbytes"] // 2
+    with open(path, "r+b") as f:
+        f.seek(off)
+        byte = f.read(1)
+        f.seek(off)
+        f.write(bytes([byte[0] ^ 0xFF]))
+
+
+def test_registry_self_heals_corrupt_store(tmp_path):
+    reg = TensorRegistry(store_dir=str(tmp_path))
+    t = _tensor()
+    handle = reg.register(t, build=BuildParams())
+    ref_vals = np.array(handle.blco.values)
+    reg.spill(handle.key)
+    _corrupt(handle.store_path)
+    healed = reg.load(handle.key)            # rebuilds from the live COO
+    assert reg.rebuilds == 1
+    assert not healed.quarantined
+    np.testing.assert_array_equal(np.array(healed.blco.values), ref_vals)
+    # the re-persisted file is intact: spill + reload round-trips
+    reg.spill(handle.key)
+    assert np.array_equal(np.array(reg.load(handle.key).blco.values),
+                          ref_vals)
+
+
+def test_registry_quarantines_without_source(tmp_path):
+    reg = TensorRegistry(store_dir=str(tmp_path))
+    t = _tensor()
+    handle = reg.register(t, build=BuildParams())
+    reg.spill(handle.key)
+    _corrupt(handle.store_path)
+    del t                                     # the COO is gone
+    gc.collect()
+    with pytest.raises(StoreCorruptionError):
+        reg.load(handle.key)
+    assert handle.quarantined
+    assert "no source tensor" in handle.quarantine_reason
+    assert reg.rebuilds == 0
+
+
+def test_quarantined_handle_refuses_new_jobs(tmp_path):
+    svc = DecompositionService(device_budget_bytes=BUDGET,
+                               store_dir=str(tmp_path))
+    t = _tensor()
+    jid = svc.submit(SubmitDecomposition(tensor=t, rank=RANK, iters=1))
+    svc.run()
+    assert svc.status(jid).state == "done"
+    handle = svc.scheduler.jobs[jid].handle
+    handle.quarantined = True
+    handle.quarantine_reason = "simulated unrebuildable corruption"
+    j2 = svc.submit(SubmitDecomposition(tensor=t, rank=RANK, iters=1))
+    st = svc.status(j2)
+    assert st.state == "failed"
+    assert "quarantined" in st.error_payload["message"]
+
+
+# ------------------------------------------------------------ lint hygiene
+def test_fault_site_hygiene_pass():
+    from repro.analysis.linter import ParsedModule
+    from repro.analysis.passes import FaultSiteHygienePass
+    bad = ParsedModule("x/y.py", (
+        "from repro.faults import inject as faults\n"
+        "def f():\n"
+        "    faults.maybe_fail('store.raed')\n"
+        "    faults.fire('plan.alloc')\n"))
+    findings = FaultSiteHygienePass().check(bad)
+    assert len(findings) == 1
+    assert "store.raed" in findings[0].message
+    ok = ParsedModule("x/y.py", (
+        "from repro.faults import inject as faults\n"
+        "def f(site):\n"
+        "    faults.maybe_fail('stream.h2d')\n"
+        "    faults.fire(site)\n"))       # non-literal: runtime-validated
+    assert FaultSiteHygienePass().check(ok) == []

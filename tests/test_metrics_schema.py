@@ -22,6 +22,7 @@ JOB_KEYS = {
     "released_bytes", "h2d_bytes", "disk_bytes", "mttkrp_calls", "launches",
     "put_time_s", "disk_time_s", "dispatch_time_s", "device_time_s",
     "hist",
+    "retries", "giveups", "demotions",
 }
 
 SERVICE_KEYS = {
@@ -37,12 +38,15 @@ SERVICE_KEYS = {
     "tenant_iterations", "tenant_shares",
     "admitted_reservation_bytes", "peak_admitted_reservation_bytes",
     "hist",
+    "store_rebuilds", "retries_total", "giveups_total", "demotions_total",
+    "watchdog_restarts",
 }
 
 ENGINE_STATS_KEYS = {
     "backend", "mttkrp_calls", "h2d_bytes", "disk_bytes", "launches",
     "put_time_s", "disk_time_s", "dispatch_time_s", "device_time_s",
     "total_time_s", "hist",
+    "retries", "giveups", "demotions",
 }
 
 HIST_KEYS = {"count", "sum", "min", "max", "buckets"}

@@ -70,7 +70,9 @@ def test_snapshot_restore_resumes_exactly(tmp_path):
     assert m["disk_bytes_total"] > 0          # store->host traffic rolled up
 
 
-def test_snapshot_skips_terminal_jobs_and_keeps_queued(tmp_path):
+def test_snapshot_keeps_terminal_jobs_and_queued(tmp_path):
+    """DONE jobs persist as finished records: a restarted service keeps
+    serving their status()/result() while never re-admitting them."""
     store = str(tmp_path / "store")
     snap = str(tmp_path / "snap")
     svc = DecompositionService(device_budget_bytes=BUDGET, store_dir=store,
@@ -84,13 +86,21 @@ def test_snapshot_skips_terminal_jobs_and_keeps_queued(tmp_path):
     assert svc.status(done).state == "done"
     assert svc.status(running).state == "running"
     assert svc.status(queued).state == "queued"
+    done_factors = np.asarray(svc.result(done).result.factors[0])
     manifest = svc.snapshot(snap)
     snap_ids = {j["job_id"] for j in manifest["jobs"]}
-    assert snap_ids == {running, queued}      # terminal jobs die with the run
+    assert snap_ids == {done, running, queued}
 
     svc2 = DecompositionService.restore(snap, device_budget_bytes=BUDGET,
                                         store_dir=store)
-    assert set(svc2.scheduler.jobs) == {running, queued}
+    assert set(svc2.scheduler.jobs) == {done, running, queued}
+    # the terminal record restores finished — status/result served, never
+    # re-admitted (it is in no queue), factors bit-identical
+    assert svc2.status(done).state == "done"
+    assert done not in svc2.scheduler.pending
+    assert done not in svc2.scheduler.active
+    assert np.array_equal(
+        np.asarray(svc2.result(done).result.factors[0]), done_factors)
     # a queued job was never admitted: it restores without a CPState and
     # initializes from its seed on admission
     svc2.run()

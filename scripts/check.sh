@@ -11,6 +11,9 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== repro-lint (blocking) =="
 python scripts/lint.py
 
+echo "== trace-tier verifiers (blocking) =="
+python scripts/lint.py --tier=trace
+
 if [[ "${1:-}" == "--fast" ]]; then
     python -m pytest -x -q tests/test_service.py tests/test_streaming.py \
         tests/test_cp_als.py

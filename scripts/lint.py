@@ -1,15 +1,29 @@
 #!/usr/bin/env python
-"""repro-lint: run the repo's AST lint passes (see repro.analysis).
+"""repro-lint: run the repo's static-analysis tiers (see repro.analysis).
 
 Usage:
-    python scripts/lint.py [paths...] [--baseline scripts/lint_baseline.json]
-                           [--format text|json] [--write-baseline] [--list]
+    python scripts/lint.py [paths...] [--tier ast|trace|all]
+                           [--baseline scripts/lint_baseline.json]
+                           [--format text|json] [--write-baseline]
+                           [--prune-baseline] [--report-out PATH] [--list]
 
-Default paths: src/repro.  Exit status 1 when any finding is not covered
-by the committed baseline (or an inline ``# repro-lint: disable=<pass>``
-comment), 0 otherwise.  ``--write-baseline`` records the current findings
-as the new baseline — entries are stamped with a placeholder reason that
-MUST be replaced with a real justification before committing.
+Tiers:
+    ast    (default) the AST lint passes over Python source;
+    trace  the trace-tier verifiers: jaxpr audits of the registered hot
+           paths, cache-key churn, symbolic BLCO encoding proofs and the
+           fused kernel's write-conflict prover (imports jax);
+    all    both.
+
+Default paths: src/repro (AST tier only — the trace tier audits the
+registered hot paths, not a path list).  Exit status 1 when any finding
+is not covered by the committed baseline (or an inline ``# repro-lint:
+disable=<pass>`` comment), or when the baseline carries STALE entries —
+suppressions whose finding no longer exists must be removed, which
+``--prune-baseline`` does in place.  ``--write-baseline`` records the
+current findings as the new baseline — entries are stamped with a
+placeholder reason that MUST be replaced with a real justification
+before committing.  ``--report-out`` writes the trace tier's artifact
+bundle (conflict report, encoding proofs, verifier metrics) as JSON.
 """
 from __future__ import annotations
 
@@ -28,6 +42,9 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("paths", nargs="*",
                     default=[os.path.join(REPO_ROOT, "src", "repro")])
+    ap.add_argument("--tier", choices=("ast", "trace", "all"),
+                    default="ast",
+                    help="which analysis tier(s) to run (default: ast)")
     ap.add_argument("--baseline",
                     default=os.path.join(REPO_ROOT, "scripts",
                                          "lint_baseline.json"))
@@ -37,6 +54,12 @@ def main(argv=None) -> int:
     ap.add_argument("--write-baseline", action="store_true",
                     help="write current findings as the suppression "
                          "baseline (justify every entry before committing)")
+    ap.add_argument("--prune-baseline", action="store_true",
+                    help="rewrite the baseline dropping stale entries "
+                         "(suppressions whose finding no longer exists)")
+    ap.add_argument("--report-out", default=None, metavar="PATH",
+                    help="write the trace tier's artifact bundle (conflict "
+                         "report + encoding proofs + metrics) as JSON")
     ap.add_argument("--list", action="store_true",
                     help="list the registered passes and exit")
     args = ap.parse_args(argv)
@@ -44,9 +67,29 @@ def main(argv=None) -> int:
     if args.list:
         for p in all_passes():
             print(f"{p.pass_id:24s} {p.description}")
+        if args.tier in ("trace", "all"):
+            from repro.analysis.trace import TRACE_PASS_IDS
+            for pid in TRACE_PASS_IDS:
+                print(f"{pid:24s} (trace tier)")
         return 0
 
-    findings = lint_paths(args.paths, root=REPO_ROOT)
+    findings = []
+    ran_pass_ids = set()
+    if args.tier in ("ast", "all"):
+        findings.extend(lint_paths(args.paths, root=REPO_ROOT))
+        ran_pass_ids |= {p.pass_id for p in all_passes()}
+    bundle = None
+    if args.tier in ("trace", "all"):
+        from repro.analysis import run_trace_tier
+        from repro.analysis.trace import TRACE_PASS_IDS
+        trace_findings, bundle, _metrics = run_trace_tier()
+        findings.extend(trace_findings)
+        ran_pass_ids |= set(TRACE_PASS_IDS)
+
+    if args.report_out and bundle is not None:
+        with open(args.report_out, "w", encoding="utf-8") as fh:
+            json.dump(bundle, fh, indent=2, sort_keys=True)
+            fh.write("\n")
 
     if args.write_baseline:
         Baseline.from_findings(
@@ -59,7 +102,22 @@ def main(argv=None) -> int:
     baseline = Baseline([]) if args.no_baseline else Baseline.load(
         args.baseline)
     unsuppressed = [f for f in findings if not baseline.suppresses(f)]
-    stale = baseline.stale_entries(findings)
+    # only entries for the tier(s) that actually ran can be judged stale —
+    # an AST-tier suppression is not stale just because only the trace
+    # tier was invoked
+    stale = [e for e in baseline.stale_entries(findings)
+             if e["pass"] in ran_pass_ids]
+
+    if args.prune_baseline:
+        if stale:
+            keep = [e for e in baseline.entries if e not in stale]
+            Baseline(keep).save(args.baseline)
+            print(f"pruned {len(stale)} stale entr"
+                  f"{'y' if len(stale) == 1 else 'ies'} from "
+                  f"{args.baseline}")
+        else:
+            print(f"no stale entries in {args.baseline}")
+        stale = []
 
     if args.format == "json":
         print(json.dumps({
@@ -71,14 +129,14 @@ def main(argv=None) -> int:
         for f in unsuppressed:
             print(f.render())
         for e in stale:
-            print(f"warning: stale baseline entry "
+            print(f"error: stale baseline entry "
                   f"{e['pass']}:{e['path']}:{e['symbol']} — the finding it "
-                  f"suppressed no longer exists; remove it")
+                  f"suppressed no longer exists; run --prune-baseline")
         n_sup = len(findings) - len(unsuppressed)
-        print(f"repro-lint: {len(unsuppressed)} finding(s), "
+        print(f"repro-lint[{args.tier}]: {len(unsuppressed)} finding(s), "
               f"{n_sup} baseline-suppressed, {len(stale)} stale baseline "
               f"entr{'y' if len(stale) == 1 else 'ies'}")
-    return 1 if unsuppressed else 0
+    return 1 if (unsuppressed or stale) else 0
 
 
 if __name__ == "__main__":

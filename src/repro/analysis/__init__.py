@@ -11,15 +11,28 @@ they are checked by tooling instead of reviewer memory:
   (``REPRO_SANITIZE=1`` or ``plan_for(..., sanitize=True)``) wrapping any
   ExecutionPlan with shape/dtype/finiteness contracts, plus ledger audits
   and lock-ownership assertions inside the service.
+* :mod:`repro.analysis.trace` — the trace tier: jaxpr audits of the
+  registered hot paths (host callbacks, dtype narrowing, cache-key
+  churn), symbolic BLCO encoding proofs, and the fused kernel's
+  write-conflict prover.  Run it via ``scripts/lint.py --tier=trace``.
+  Imported lazily (``run_trace_tier``) so the AST tier stays jax-free.
 """
 from .linter import (Baseline, Finding, LintPass, ParsedModule,  # noqa: F401
                      all_passes, lint_paths, lint_sources)
 from .sanitize import (SanitizedPlan, SanitizerError,  # noqa: F401
                        sanitize_enabled, sanitized, wrap_plan)
 
+
+def run_trace_tier(**kwargs):
+    """Lazy entry to :func:`repro.analysis.trace.run_trace_tier` (imports
+    jax only when the trace tier actually runs)."""
+    from .trace import run_trace_tier as _run
+    return _run(**kwargs)
+
+
 __all__ = [
     "Baseline", "Finding", "LintPass", "ParsedModule", "all_passes",
-    "lint_paths", "lint_sources",
+    "lint_paths", "lint_sources", "run_trace_tier",
     "SanitizedPlan", "SanitizerError", "sanitize_enabled", "sanitized",
     "wrap_plan",
 ]

@@ -1,0 +1,94 @@
+"""Trace-tier static analysis: verification over traced jaxprs + encodings.
+
+The AST tier (``repro.analysis.linter`` + ``passes``) checks Python
+source; this tier checks what actually executes and what the format
+actually encodes, all offline (abstract tracing, pure integer
+arithmetic — no GPU/TPU, no large arrays):
+
+* :mod:`.jaxpr_audit`  — host callbacks/transfers and dtype narrowing on
+  accumulation edges, over the registered hot paths (:mod:`.hotpaths`);
+* :mod:`.cachekeys`    — jit cache-key churn: reservation roundings must
+  keep executable counts logarithmic in launch shape and independent of
+  tenant count;
+* :mod:`.encoding`     — symbolic proofs that the BLCO bit layout is
+  lossless, u64-safe, int32-safe, gather-in-bounds and padded-lane-
+  no-op for any ``BuildParams``;
+* :mod:`.conflicts`    — the fused kernel's write-set proof (single
+  writer per row per step / declared conflicts) plus the per-launch
+  machine-readable conflict report.
+
+Findings are plain :class:`repro.analysis.Finding` objects, so the AST
+tier's baseline and suppression machinery applies unchanged;
+``scripts/lint.py --tier=trace`` is the CLI entry.
+"""
+from __future__ import annotations
+
+import time
+
+from .cachekeys import (PASS_CHURN, audit_reservation_churn,  # noqa: F401
+                        audit_tenant_invariance, churn_bound,
+                        enumerate_reservations, shipped_roundings)
+from .conflicts import (PASS_CONFLICT, audit_conflicts,  # noqa: F401
+                        check_scatter_claims, check_write_structure,
+                        conflict_report, prove_variant, scatter_facts)
+from .encoding import (DEFAULT_CONFIGS, PASS_ENCODING,  # noqa: F401
+                       EncodingProof, audit_encodings, prove_encoding,
+                       verify_layout)
+from .hotpaths import HotPath, registered_hot_paths  # noqa: F401
+from .jaxpr_audit import (PASS_CALLBACK, PASS_NARROWING,  # noqa: F401
+                          audit_callbacks, audit_hot_path, audit_narrowing)
+from .jaxprs import trace_jaxpr, walk_eqns  # noqa: F401
+from .metrics import TraceVerifyMetrics  # noqa: F401
+
+TRACE_PASS_IDS = (PASS_CALLBACK, PASS_NARROWING, PASS_CHURN, PASS_ENCODING,
+                  PASS_CONFLICT)
+
+
+def run_trace_tier(*, metrics: TraceVerifyMetrics | None = None):
+    """Run every verifier family; returns ``(findings, report, metrics)``.
+
+    ``report`` is the artifact bundle: the write-conflict report (the
+    per-launch conflict structure the segmented-reduction invariant test
+    and the CI artifact consume) plus the encoding proofs and the
+    verifier metrics snapshot.
+    """
+    m = metrics if metrics is not None else TraceVerifyMetrics()
+    findings = []
+    t_start = time.perf_counter()
+
+    t0 = time.perf_counter()
+    for hp in registered_hot_paths():
+        closed = hp.trace()
+        m.hot_paths_traced += 1
+        m.jaxpr_eqns_walked += sum(1 for _ in walk_eqns(closed))
+        findings.extend(audit_callbacks(closed, path=hp.path,
+                                        symbol=hp.name))
+        findings.extend(audit_narrowing(closed, path=hp.path,
+                                        symbol=hp.name))
+    m.runtime_jaxpr_audit_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    findings.extend(audit_reservation_churn())
+    findings.extend(audit_tenant_invariance())
+    m.runtime_cache_churn_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    proofs, enc_findings = audit_encodings()
+    m.encodings_verified = len(proofs)
+    findings.extend(enc_findings)
+    m.runtime_encoding_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    conflict_findings, report = audit_conflicts()
+    findings.extend(conflict_findings)
+    m.launches_analyzed = len(report["launches"])
+    m.runtime_conflicts_s = time.perf_counter() - t0
+
+    m.runtime_total_s = time.perf_counter() - t_start
+    m.count_findings(findings)
+    bundle = {
+        "conflict_report": report,
+        "encoding_proofs": [p.snapshot() for p in proofs],
+        "metrics": m.snapshot(),
+    }
+    return findings, bundle, m

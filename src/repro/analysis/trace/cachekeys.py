@@ -1,0 +1,126 @@
+"""Cache-key churn audit: jit executable counts must be bounded.
+
+Every distinct reservation size is a distinct traced shape, i.e. a
+distinct XLA executable for the stacked scan / fused kernel — so the
+function mapping a launch size to its reservation decides how many
+compilations a ``plan_for`` regime can generate across a service
+workload.  The audit enumerates the *image* of each regime's shipped
+rounding over the launch-size range and fails when the count grows
+linearly with launch shape (unbounded churn) instead of
+logarithmically; it also proves the roundings are sound (cover the
+launch, stay LANE-divisible for the Pallas tiler, monotone so a bigger
+tensor never maps below a smaller one).
+
+Tenant count can never enter the key: reservations are pure functions
+of launch nnz, and ``audit_tenant_invariance`` mechanizes that by
+checking an N-tenant workload's key count stays within the same
+logarithmic envelope regardless of N.
+
+The audit runs against the functions the regimes actually ship
+(``core.launches.default_reservation``, ``core.padding.next_pow2`` via
+``reservation_for``) — pass a different table to audit a candidate
+rounding, e.g. the known-bad raw-LANE rounding in the fixture tests.
+"""
+from __future__ import annotations
+
+from repro.analysis.linter import Finding
+
+PASS_CHURN = "trace-cache-churn"
+
+#: keys enumerated densely over [1, MAX_NNZ]; the churn bound below is
+#: expressed in octaves of this range, so the verdict is range-independent
+MAX_NNZ = 1 << 18
+
+#: admissible distinct-reservation count: ``CLASSES_PER_OCTAVE`` per
+#: power-of-two octave (size classes), plus slack for the floor bucket
+CLASSES_PER_OCTAVE = 16
+
+
+def shipped_roundings() -> dict:
+    """regime name -> the reservation rounding that regime really uses."""
+    from repro.core.launches import default_reservation
+    from repro.core.padding import next_pow2
+
+    return {
+        # LaunchCache.from_blco default (in-memory regime)
+        "in_memory": default_reservation,
+        # reservation_for (streamed + disk_streamed regimes)
+        "streamed": next_pow2,
+        "disk_streamed": next_pow2,
+    }
+
+
+def enumerate_reservations(rounding, max_nnz: int = MAX_NNZ) -> set:
+    """The reachable reservation set over launch sizes [1, max_nnz]."""
+    return {rounding(n) for n in range(1, max_nnz + 1)}
+
+
+def churn_bound(max_nnz: int = MAX_NNZ) -> int:
+    """Admissible distinct-executable count for the launch-size range."""
+    octaves = max(1, max_nnz.bit_length())
+    return CLASSES_PER_OCTAVE * octaves
+
+
+def audit_rounding(regime: str, rounding, *, max_nnz: int = MAX_NNZ,
+                   path: str = "src/repro/core/padding.py") -> list[Finding]:
+    """Soundness + boundedness of one regime's reservation rounding."""
+    findings = []
+
+    def flag(msg):
+        findings.append(Finding(pass_id=PASS_CHURN, path=path,
+                                symbol=regime, line=0, message=msg))
+
+    prev = 0
+    image = set()
+    for n in range(1, max_nnz + 1):
+        r = rounding(n)
+        image.add(r)
+        if r < n:
+            flag(f"reservation {r} smaller than launch nnz {n}: padded "
+                 f"launches would overflow the buffer")
+            return findings
+        if r < prev:
+            flag(f"rounding not monotone at nnz {n}: {r} < {prev} — a "
+                 f"bigger launch must never get a smaller reservation")
+            return findings
+        prev = r
+    bound = churn_bound(max_nnz)
+    if len(image) > bound:
+        flag(f"{len(image)} distinct reservations over launch sizes "
+             f"[1, {max_nnz}] (bound: {bound}) — jit cache keys grow "
+             f"linearly with launch shape; use size-class or pow2 "
+             f"rounding so executable count is O(log max_launch)")
+    return findings
+
+
+def audit_reservation_churn(roundings: dict | None = None, *,
+                            max_nnz: int = MAX_NNZ) -> list[Finding]:
+    """Audit every regime's shipped rounding (or a candidate table)."""
+    findings = []
+    for regime, fn in (roundings or shipped_roundings()).items():
+        findings.extend(audit_rounding(regime, fn, max_nnz=max_nnz))
+    return findings
+
+
+def audit_tenant_invariance(n_tenants: int = 1000, *,
+                            roundings: dict | None = None) -> list[Finding]:
+    """Executable count over an N-tenant workload stays O(log), not O(N).
+
+    A deterministic spread of per-tenant max-launch sizes (every tenant a
+    different tensor) must collapse onto the bounded reservation classes —
+    the property that lets the pooled service executor reuse one compiled
+    executable per shape across tenants.
+    """
+    findings = []
+    sizes = [1 + (i * 2654435761) % MAX_NNZ for i in range(n_tenants)]
+    for regime, fn in (roundings or shipped_roundings()).items():
+        keys = {fn(s) for s in sizes}
+        bound = churn_bound(MAX_NNZ)
+        if len(keys) > bound:
+            findings.append(Finding(
+                pass_id=PASS_CHURN, path="src/repro/core/padding.py",
+                symbol=regime, line=0,
+                message=f"{len(keys)} distinct reservations across "
+                        f"{n_tenants} tenants (bound: {bound}) — the jit "
+                        f"cache grows with tenant count"))
+    return findings

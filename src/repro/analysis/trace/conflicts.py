@@ -1,0 +1,234 @@
+"""Write-conflict prover for the fused MTTKRP kernel (segment + stash).
+
+Two halves, cross-checked against each other:
+
+* **traced facts** — walk the fused kernel's jaxpr and extract its write
+  set: every scatter primitive with its declared ``unique_indices``
+  claim, and every ``pallas_call`` whose grid-sequential block writes
+  are the other accumulation mechanism.  The *stash* variant must stage
+  NO scatter at all (its one-hot matmul accumulates every contribution
+  to a row inside a single add per grid step — single-writer-per-row-
+  per-step by construction on TPU's sequential grid).  The *segment*
+  variant's per-tile outputs write disjoint compressed slots (single
+  writer per slot), and all conflicts are deferred to exactly one final
+  scatter-add which must declare ``unique_indices=False`` — the same
+  row can be targeted by multiple discovered segments (non-adjacent
+  repeats within a tile, repeats across tiles, and the padding
+  segments that land on row 0).
+
+* **conflict report** — the per-launch conflict *structure* of a real
+  tensor, computed host-side from the BLCO encoding itself: segments
+  per tile, writers per output row, and whether a ``unique_indices``
+  claim would be sound.  This machine-readable report is the artifact
+  the future opportunistic conflict-resolution kernel (ROADMAP item 3)
+  will be validated against: any replacement of the pre-planned
+  segmented reduction must preserve exactly the per-row write
+  multiplicities recorded here.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.analysis.linter import Finding
+
+from .jaxprs import walk_eqns
+
+PASS_CONFLICT = "trace-write-conflict"
+
+_FUSED = "src/repro/kernels/fused.py"
+
+SCATTER_PRIMITIVES = ("scatter-add", "scatter", "scatter-mul",
+                      "scatter-max", "scatter-min")
+
+
+def scatter_facts(closed) -> list[dict]:
+    """Every scatter/pallas write site in the traced kernel, with claims."""
+    facts = []
+    for site in walk_eqns(closed):
+        if site.primitive in SCATTER_PRIMITIVES:
+            facts.append({
+                "primitive": site.primitive,
+                "unique_indices": bool(site.eqn.params.get("unique_indices",
+                                                           False)),
+                "inside_pallas": "pallas_call" in site.context,
+                "context": "/".join(site.context) or "<top>",
+            })
+        elif site.primitive == "pallas_call":
+            facts.append({"primitive": "pallas_call",
+                          "context": "/".join(site.context) or "<top>"})
+    return facts
+
+
+def prove_variant(variant: str, *, symbol: str | None = None):
+    """Trace one fused variant and prove its write-set structure.
+
+    Returns ``(facts, findings)``; empty findings = the proof holds.
+    """
+    from .hotpaths import _fused
+    symbol = symbol or f"_fused_flat[{variant}]"
+    facts = scatter_facts(_fused(variant))
+    return facts, check_write_structure(facts, variant=variant,
+                                        symbol=symbol)
+
+
+def check_write_structure(facts: list, *, variant: str,
+                          symbol: str) -> list[Finding]:
+    """The per-variant single-writer proof over extracted write facts."""
+    findings = []
+
+    def flag(msg):
+        findings.append(Finding(pass_id=PASS_CONFLICT, path=_FUSED,
+                                symbol=symbol, line=0, message=msg))
+
+    scatters = [f for f in facts if f["primitive"] in SCATTER_PRIMITIVES
+                and not f.get("inside_pallas")]
+    pallas = [f for f in facts if f["primitive"] == "pallas_call"]
+    if not pallas:
+        flag("no pallas_call staged — the fused pipeline is not fused")
+    if variant == "stash":
+        if scatters:
+            flag(f"stash variant stages {len(scatters)} scatter(s) outside "
+                 f"the kernel; its single-writer proof requires ALL "
+                 f"accumulation to happen in the sequential-grid one-hot "
+                 f"matmul")
+    elif variant == "segment":
+        if len(scatters) != 1:
+            flag(f"segment variant stages {len(scatters)} scatters "
+                 f"(expected exactly one per-segment apply)")
+        for s in scatters:
+            if s["unique_indices"]:
+                flag(f"{s['primitive']} claims unique_indices=True, but "
+                     f"multiple discovered segments (non-adjacent repeats, "
+                     f"cross-tile repeats, padding) can target one row — "
+                     f"the claim licenses XLA to drop the conflict "
+                     f"handling and corrupt the accumulation")
+    else:
+        flag(f"unknown fused variant {variant!r}")
+    return findings
+
+
+def check_scatter_claims(closed, *, duplicates_possible: bool, path: str,
+                         symbol: str) -> list[Finding]:
+    """Generic check: no scatter may claim uniqueness conflicts violate."""
+    findings = []
+    if not duplicates_possible:
+        return findings
+    for f in scatter_facts(closed):
+        if f["primitive"] in SCATTER_PRIMITIVES and f["unique_indices"]:
+            findings.append(Finding(
+                pass_id=PASS_CONFLICT, path=path, symbol=symbol, line=0,
+                message=f"{f['primitive']} (at {f['context']}) claims "
+                        f"unique_indices=True while the write set provably "
+                        f"contains duplicate rows"))
+    return findings
+
+
+# ------------------------------------------------------------------ report
+def conflict_report(blco, mode: int, *, tile: int = 256) -> dict:
+    """Per-launch conflict structure of ``blco``'s fused-kernel write set.
+
+    Pure host arithmetic over the encoding (no device, no tracing): the
+    target coordinates come from ``decode_coords`` — i.e. from the very
+    bit fields the kernel extracts — split into the reservation-padded
+    flat stream exactly as ``LaunchCache.flat()`` lays it out, with
+    segments discovered per tile the way the fused kernel discovers them.
+    """
+    from repro.core.blco import decode_coords
+    from repro.core.launches import default_reservation
+    from repro.core.mttkrp import choose_resolution
+
+    tgt_all = decode_coords(blco)[:, mode] if blco.nnz else \
+        np.zeros(0, np.int64)
+    max_launch = max((l.nnz for l in blco.launches), default=1)
+    res = default_reservation(max_launch)
+    tile = int(np.gcd(res, max(1, min(tile, res))))
+    resolution = choose_resolution(blco.dims[mode])
+
+    launches = []
+    global_writers = np.zeros(blco.dims[mode], np.int64)
+    for i, launch in enumerate(blco.launches):
+        tgt = np.zeros(res, np.int64)
+        valid = np.zeros(res, bool)
+        n = launch.nnz
+        tgt[:n] = tgt_all[launch.start:launch.end]
+        valid[:n] = True
+
+        # per-tile segment discovery: boundary at each tile start and
+        # wherever the target changes (paper §5.1 step 3)
+        pos = np.arange(res)
+        prev = np.roll(tgt, 1)
+        starts = (pos % tile == 0) | (tgt != prev)
+        seg_starts = np.flatnonzero(starts)
+        seg_valid = valid[seg_starts]           # segment has real data?
+        seg_rows = tgt[seg_starts]
+
+        writers = np.bincount(seg_rows[seg_valid],
+                              minlength=blco.dims[mode])
+        global_writers += writers
+        conflict_rows = np.flatnonzero(writers > 1)
+        padding_segments = int((~seg_valid).sum())
+        launches.append({
+            "launch": i,
+            "nnz": int(n),
+            "padded_nnz": int(res),
+            "tiles": int(res // tile),
+            "segments": int(seg_valid.sum()),
+            "padding_segments": padding_segments,
+            "distinct_rows": int((writers > 0).sum()),
+            "max_writers_per_row": int(writers.max()) if n else 0,
+            "conflict_rows": [int(r) for r in conflict_rows[:8]],
+        })
+
+    max_writers = int(global_writers.max()) if blco.nnz else 0
+    return {
+        "mode": int(mode),
+        "dims": [int(d) for d in blco.dims],
+        "tile": int(tile),
+        "reservation": int(res),
+        "resolution": resolution,
+        "launches": launches,
+        "total_segments": int(sum(l["segments"] for l in launches)),
+        # writers per row across the ONE fused scatter (all launches'
+        # segments merge in a single update step)
+        "max_writers_per_row_per_step": max_writers,
+        # padding segments always target row 0 with zero sums, so the
+        # final scatter sees duplicate indices whenever any padding or
+        # any repeated target exists:
+        "unique_indices_sound": bool(
+            max_writers <= 1
+            and all(l["padding_segments"] == 0 for l in launches)),
+    }
+
+
+def audit_conflicts(blco=None, *, mode: int = 0, tile: int = 256):
+    """Tier entry: prove both variants + report a representative tensor.
+
+    Returns ``(findings, report)``.  Cross-check: when the report shows
+    conflicting writers, the traced segment kernel must not claim
+    uniqueness (the structural proof already enforces it; the report
+    makes the *reason* machine-readable per launch).
+    """
+    findings = []
+    for variant in ("segment", "stash"):
+        _, fs = prove_variant(variant)
+        findings.extend(fs)
+    if blco is None:
+        from repro.core.blco import build_blco
+        from repro.core.tensor import random_tensor
+        blco = build_blco(random_tensor((40, 25, 30), 2000, seed=1,
+                                        dist="powerlaw"),
+                          target_bits=12, max_nnz_per_block=256)
+    report = conflict_report(blco, mode, tile=tile)
+    if not report["unique_indices_sound"]:
+        facts, _ = prove_variant("segment")
+        for f in facts:
+            if f["primitive"] in SCATTER_PRIMITIVES \
+                    and not f.get("inside_pallas") and f["unique_indices"]:
+                findings.append(Finding(
+                    pass_id=PASS_CONFLICT, path=_FUSED,
+                    symbol="_fused_flat[segment]", line=0,
+                    message="kernel claims unique scatter indices but the "
+                            "conflict report proves duplicate writers "
+                            f"(max {report['max_writers_per_row_per_step']}"
+                            " per row per step)"))
+    return findings, report

@@ -1,0 +1,100 @@
+"""Jaxpr auditor: host-callback and dtype-narrowing checks over hot paths.
+
+Two verdicts per traced hot path, both on what JAX will *execute* rather
+than on Python source (the AST tier's ``host-sync``/``dtype-promotion``
+passes are the source-level complements):
+
+* **host callbacks / transfers in jitted regions** — any ``*_callback``,
+  ``infeed``/``outfeed`` or ``device_put`` primitive staged inside a hot
+  path forces a host round-trip per dispatch, exactly the per-launch
+  overhead the launch cache exists to eliminate;
+* **silent dtype narrowing on accumulation edges** — a
+  ``convert_element_type`` that loses float precision whose value flows
+  (through any chain of ops, including re-widening) into an accumulation
+  primitive.  The repo's contract is promote-never-downcast
+  (``jnp.result_type``); a narrowing conversion ahead of the accumulator
+  silently converts a float64-tensor run into float32 math.
+
+The taint propagation is per-jaxpr (narrowing and sink inside the same
+(sub-)jaxpr); conservative — any eqn consuming a tainted var taints all
+its outputs — so re-widening before the accumulator does NOT clear the
+finding, by design.
+"""
+from __future__ import annotations
+
+from repro.analysis.linter import Finding
+
+from .jaxprs import is_float_narrowing, leaf_jaxprs, var_dtype, walk_eqns
+
+PASS_CALLBACK = "trace-host-callback"
+PASS_NARROWING = "trace-dtype-narrowing"
+
+#: primitives that hand control (or data) back to the host mid-jit
+HOST_PRIMITIVES = ("infeed", "outfeed", "device_put")
+
+#: primitives that accumulate values — the sinks narrowing must not reach
+ACCUMULATION_PRIMITIVES = frozenset({
+    "scatter-add", "scatter-mul", "add_any", "reduce_sum", "cumsum",
+    "dot_general", "segment_sum",
+})
+
+
+def _is_host_primitive(name: str) -> bool:
+    return "callback" in name or name in HOST_PRIMITIVES
+
+
+def audit_callbacks(closed, *, path: str, symbol: str) -> list[Finding]:
+    """Flag every host-callback/transfer primitive staged in the jaxpr."""
+    findings = []
+    for site in walk_eqns(closed):
+        if _is_host_primitive(site.primitive):
+            where = "/".join(site.context) or "<top>"
+            findings.append(Finding(
+                pass_id=PASS_CALLBACK, path=path, symbol=symbol, line=0,
+                message=f"host primitive '{site.primitive}' staged inside "
+                        f"the jitted hot path (at {where}, depth "
+                        f"{site.depth}): forces a host round-trip per "
+                        f"dispatch"))
+    return findings
+
+
+def audit_narrowing(closed, *, path: str, symbol: str) -> list[Finding]:
+    """Taint floats through narrowing converts; flag tainted accumulators."""
+    findings = []
+    for jaxpr, context in leaf_jaxprs(closed):
+        tainted: dict[object, str] = {}     # var -> narrowing description
+        for eqn in jaxpr.eqns:
+            src_taint = None
+            for v in eqn.invars:
+                if id(v) in tainted:
+                    src_taint = tainted[id(v)]
+                    break
+            name = eqn.primitive.name
+            if name == "convert_element_type" and eqn.invars:
+                src = var_dtype(eqn.invars[0])
+                dst = eqn.params.get("new_dtype")
+                if is_float_narrowing(src, dst):
+                    src_taint = src_taint or f"{src} -> {dst}"
+            if src_taint is None:
+                continue
+            if name in ACCUMULATION_PRIMITIVES:
+                where = "/".join(context) or "<top>"
+                findings.append(Finding(
+                    pass_id=PASS_NARROWING, path=path, symbol=symbol,
+                    line=0,
+                    message=f"accumulation primitive '{name}' (at {where}) "
+                            f"consumes a value that passed through a "
+                            f"narrowing convert ({src_taint}); accumulate "
+                            f"at the promoted dtype instead"))
+            for v in eqn.outvars:
+                tainted[id(v)] = src_taint
+    return findings
+
+
+def audit_hot_path(hot_path) -> list[Finding]:
+    """Both audits over one :class:`~.hotpaths.HotPath`."""
+    closed = hot_path.trace()
+    return (audit_callbacks(closed, path=hot_path.path,
+                            symbol=hot_path.name)
+            + audit_narrowing(closed, path=hot_path.path,
+                              symbol=hot_path.name))

@@ -1,0 +1,111 @@
+"""Jaxpr tracing + walking utilities shared by the trace-tier verifiers.
+
+The AST tier (``repro.analysis.passes``) sees Python source; this tier sees
+what JAX will actually *execute*: the jaxpr of each registered hot path,
+including every nested sub-jaxpr (``pjit`` bodies, ``scan``/``while`` carry
+bodies, ``cond`` branches, ``pallas_call`` kernel bodies, scatter update
+functions).  Everything here is backend-free — tracing happens with
+abstract values only, so the verifiers run offline on a CPU container with
+no accelerator attached.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+try:                                # jax >= 0.4.x
+    from jax.extend import core as _jex_core
+    Jaxpr = _jex_core.Jaxpr
+    ClosedJaxpr = _jex_core.ClosedJaxpr
+except ImportError:                 # pragma: no cover - older jax fallback
+    from jax import core as _jax_core
+    Jaxpr = _jax_core.Jaxpr
+    ClosedJaxpr = _jax_core.ClosedJaxpr
+
+
+@dataclasses.dataclass(frozen=True)
+class EqnSite:
+    """One primitive application inside a traced hot path.
+
+    ``depth`` is the sub-jaxpr nesting depth (0 = the outermost jaxpr) and
+    ``context`` the chain of enclosing primitive names (e.g.
+    ``('pjit', 'scan')``) — enough to say *where* in the traced program a
+    finding lives, since jaxprs carry no source lines.
+    """
+    primitive: str
+    depth: int
+    context: tuple
+    eqn: object = dataclasses.field(hash=False, compare=False)
+
+
+def trace_jaxpr(fn, *args, **kwargs) -> ClosedJaxpr:
+    """``jax.make_jaxpr`` with kwargs threaded through (abstract tracing)."""
+    return jax.make_jaxpr(lambda *a: fn(*a, **kwargs))(*args)
+
+
+def _sub_jaxprs(params: dict):
+    """Every nested (Closed)Jaxpr reachable from one eqn's params."""
+    for value in params.values():
+        stack = [value]
+        while stack:
+            v = stack.pop()
+            if isinstance(v, ClosedJaxpr):
+                yield v.jaxpr
+            elif isinstance(v, Jaxpr):
+                yield v
+            elif isinstance(v, (tuple, list)):
+                stack.extend(v)
+
+
+def walk_eqns(closed: ClosedJaxpr):
+    """Yield an :class:`EqnSite` for every eqn, sub-jaxprs included."""
+    jaxpr = closed.jaxpr if isinstance(closed, ClosedJaxpr) else closed
+
+    def _walk(j, depth, context):
+        for eqn in j.eqns:
+            yield EqnSite(primitive=eqn.primitive.name, depth=depth,
+                          context=context, eqn=eqn)
+            sub_context = context + (eqn.primitive.name,)
+            for sub in _sub_jaxprs(eqn.params):
+                yield from _walk(sub, depth + 1, sub_context)
+
+    yield from _walk(jaxpr, 0, ())
+
+
+def leaf_jaxprs(closed: ClosedJaxpr):
+    """Yield every (jaxpr, context) pair, sub-jaxprs included — the unit the
+    per-jaxpr dataflow analyses (taint propagation) operate on."""
+    jaxpr = closed.jaxpr if isinstance(closed, ClosedJaxpr) else closed
+
+    def _walk(j, context):
+        yield j, context
+        for eqn in j.eqns:
+            for sub in _sub_jaxprs(eqn.params):
+                yield from _walk(sub, context + (eqn.primitive.name,))
+
+    yield from _walk(jaxpr, ())
+
+
+def var_dtype(v):
+    """dtype of a jaxpr var/literal aval, or None for non-array avals."""
+    aval = getattr(v, "aval", None)
+    return getattr(aval, "dtype", None)
+
+
+def is_float_narrowing(src_dtype, dst_dtype) -> bool:
+    """True when a convert loses floating-point precision (f64->f32,
+    f32->bf16/f16, ...).  Integer/bool converts never count — index math
+    legitimately moves between integer widths."""
+    if src_dtype is None or dst_dtype is None:
+        return False
+    src = np.dtype(src_dtype)
+    dst = np.dtype(dst_dtype)
+    src_float = np.issubdtype(src, np.floating)
+    dst_float = np.issubdtype(dst, np.floating)
+    if not src_float:
+        return False
+    if not dst_float:
+        return True                 # float -> int truncates outright
+    return dst.itemsize < src.itemsize

@@ -94,6 +94,30 @@ def cp_als_init(dims, rank, *, norm_x: float, tol: float = 1e-5,
                    iteration=0, converged=False)
 
 
+def sweep_mode_update(m_mat, grams, mode: int):
+    """Pure device math of one ALS mode update (Alg. 1 lines 3 + 5).
+
+    ``m_mat`` is the mode's MTTKRP result (line 4), ``grams`` the current
+    Gram matrices.  Returns ``(factor, lam, gram)``: the column-normalized
+    new factor, its column norms, and its refreshed Gram matrix.  Kept as a
+    free jnp-pure function so the trace-tier jaxpr auditor
+    (``repro.analysis.trace``) can audit the sweep body exactly as the
+    scheduler executes it.
+    """
+    rank = m_mat.shape[1]
+    dtype = grams[mode].dtype
+    # V = hadamard of Gram matrices of all other modes (Alg. 1 line 3)
+    v = jnp.ones((rank, rank), dtype)
+    for m, g in enumerate(grams):
+        if m != mode:
+            v = v * g
+    a_new = m_mat @ jnp.linalg.pinv(v)                   # line 5
+    lam = jnp.linalg.norm(a_new, axis=0)
+    lam = jnp.where(lam > 0, lam, 1.0)
+    factor = a_new / lam
+    return factor, lam, factor.T @ factor
+
+
 def cp_als_step(mttkrp_fn, state: CPState) -> CPState:
     """One full ALS sweep (all modes, Alg. 1 lines 2-6) + fit update, in place.
 
@@ -110,17 +134,8 @@ def cp_als_step(mttkrp_fn, state: CPState) -> CPState:
     factors, grams = state.factors, state.grams
     m_mat = None
     for n in range(n_modes):
-        # V = hadamard of Gram matrices of all other modes (Alg. 1 line 3)
-        v = jnp.ones((rank, rank), dtype)
-        for m in range(n_modes):
-            if m != n:
-                v = v * grams[m]
         m_mat = mttkrp_fn(factors, n)                    # line 4
-        a_new = m_mat @ jnp.linalg.pinv(v)               # line 5
-        lam = jnp.linalg.norm(a_new, axis=0)
-        lam = jnp.where(lam > 0, lam, 1.0)
-        factors[n] = a_new / lam
-        grams[n] = factors[n].T @ factors[n]
+        factors[n], lam, grams[n] = sweep_mode_update(m_mat, grams, n)
         state.lam = lam
 
     # fit = 1 - ||X - X_hat||_F / ||X||_F, computed without materializing

@@ -32,7 +32,20 @@ from repro.obs import trace as obs_trace
 from .blco import BLCOTensor
 from .counters import record_dispatch
 from .mttkrp import (DEFAULT_COPIES, choose_resolution, launch_mttkrp_impl)
-from .padding import LANE, pad_multiple
+from .padding import pad_bucket, pad_multiple
+
+
+def default_reservation(max_launch: int) -> int:
+    """The in-memory regime's default reservation for a given largest launch.
+
+    Size-class rounding (``pad_bucket``): bounded distinct reservations
+    (each reservation is a traced shape, i.e. a jit cache key for the
+    stacked scan and the fused kernel), ≤ 25% padding waste.  The single
+    definition the cache builder, the byte predictor and the trace-tier
+    cache-churn audit all share — so the audited rounding IS the shipped
+    rounding.
+    """
+    return pad_bucket(max_launch)
 
 
 @functools.partial(
@@ -72,9 +85,12 @@ class LaunchCache:
 
     Built once per plan; every ``mttkrp`` call afterwards is one jitted
     dispatch with zero host-side work.  The reservation defaults to the
-    largest launch rounded up to the ``LANE`` multiple (memory-tight: these
-    buffers are private to one tensor, unlike the streaming regime's
-    power-of-two cross-tensor buckets).
+    largest launch rounded up to a geometric size class
+    (``default_reservation``): near-memory-tight (≤ 25% padding) while
+    keeping the number of distinct traced shapes — and therefore compiled
+    executables — logarithmic in launch size, unlike a bare ``LANE``
+    multiple (the streaming regime uses coarser power-of-two cross-tensor
+    buckets instead).
 
     Padding waste is bounded by construction: ``build_blco`` splits every
     block to ``max_nnz_per_block`` and greedily batches blocks into
@@ -118,7 +134,7 @@ class LaunchCache:
             # reservation is rounded up, never honoured as-is
             res = pad_multiple(int(reservation_nnz))
         else:
-            res = pad_multiple(max_launch)
+            res = default_reservation(max_launch)
         chunks = prepare_chunks(blco, res)
         return cls.from_chunks(chunks, blco, reservation_nnz=res)
 
@@ -207,11 +223,11 @@ class LaunchCache:
 
 def launch_cache_bytes(blco: BLCOTensor) -> int:
     """Predicted device footprint of a ``LaunchCache`` for ``blco``:
-    L stacked launches x (hi + lo + vals + bases) at the LANE-multiple
-    reservation — what ``DeviceBLCO``/``InMemoryPlan`` actually hold."""
+    L stacked launches x (hi + lo + vals + bases) at the default
+    size-class reservation — what ``DeviceBLCO``/``InMemoryPlan`` hold."""
     if not blco.launches:
         return 0
     max_launch = max(l.nnz for l in blco.launches)
-    res = pad_multiple(max_launch, LANE)
+    res = default_reservation(max_launch)
     per_elem = 4 + 4 + blco.values.dtype.itemsize + 4 * blco.order
     return len(blco.launches) * res * per_elem

@@ -67,6 +67,16 @@ class LinearSpec:
 
     @staticmethod
     def make(dims) -> "LinearSpec":
+        # the whole device pipeline carries coordinates, block bases and
+        # gather indices as int32, and the 32-bit-word field extraction
+        # (core.u64.extract_field) asserts width <= 32 — a mode longer
+        # than 2^31 would pass construction here and crash (or wrap) deep
+        # inside a traced kernel; reject it at the API boundary instead
+        for d in dims:
+            if int(d) > 1 << 31:
+                raise ValueError(
+                    f"mode length {int(d)} exceeds 2^31; coordinates are "
+                    f"int32 throughout the device pipeline")
         bits = mode_bits(dims)
         pos = alto_bit_positions(dims)
         total = sum(bits)

@@ -8,9 +8,17 @@ roundings are in deliberate use:
 * ``next_pow2`` / ``pad_pow2`` — power-of-two buckets, so *different*
   tensors whose largest launches land in the same bucket share one
   compiled executable (the streaming regime's cross-tensor reuse);
-* ``pad_multiple`` — round up to a lane/tile multiple only, the memory-
-  tight choice for a device-resident copy whose shapes are private to one
-  tensor anyway (the in-memory regime).
+* ``pad_multiple`` — round up to a lane/tile multiple only, for callers
+  that pinned an explicit reservation and just need it tile-divisible;
+* ``pad_bucket`` — geometric size classes (at most ``2 + 8·octaves``
+  distinct values up to any bound), the in-memory regime's default
+  reservation.  ``pad_multiple`` alone admits O(max_launch / LANE)
+  distinct reservation shapes — and therefore that many jit cache
+  entries for the stacked scan — which the trace-tier cache-churn audit
+  (``repro.analysis.trace.cachekeys``) flags as unbounded in launch
+  shape.  Size classes cap the executable count at O(log max_launch)
+  while keeping padding waste ≤ 25% (vs up to 2x for pure pow2
+  buckets).
 
 ``LANE`` is the TPU lane count: nnz buffers are kept at a multiple of it
 so vector loads are aligned and every Pallas tile size that divides the
@@ -36,3 +44,19 @@ def pad_pow2(n: int, floor: int = LANE) -> int:
 def pad_multiple(n: int, multiple: int = LANE) -> int:
     """Round ``n`` up to a multiple (minimum one multiple)."""
     return max(multiple, -(-n // multiple) * multiple)
+
+
+def pad_bucket(n: int, multiple: int = LANE) -> int:
+    """Size-class rounding: round ``n`` up to the next of 8 geometrically
+    spaced classes per power-of-two octave (classes are LANE multiples).
+
+    With ``n`` in (2^(k-1), 2^k] the class step is ``max(multiple,
+    2^(k-3))``, so the overshoot is < 2^(k-3) < n/4 — at most 25% padded
+    waste — while the number of distinct buckets below any bound N is at
+    most ``8·log2(N)`` plus a constant.  That bound is what keeps the
+    in-memory regime's jit cache (reservation is a traced shape) from
+    growing linearly with launch size.
+    """
+    n = max(int(n), multiple)
+    step = max(multiple, (1 << (n - 1).bit_length()) >> 3)
+    return -(-n // step) * step

@@ -181,3 +181,32 @@ def render_prometheus(metrics, *, prefix: str = "repro") -> str:
                            ("launch_nnz", metrics.hist.launch_nnz)):
         _prom_hist(f"{prefix}_{name}", hist_obj, _HIST_HELP[name], out)
     return "\n".join(out) + "\n"
+
+
+_ANALYSIS_COUNTER_KEYS = (
+    "hot_paths_traced", "jaxpr_eqns_walked", "encodings_verified",
+    "launches_analyzed", "findings_total", "findings_jaxpr_audit",
+    "findings_cache_churn", "findings_encoding", "findings_conflicts",
+)
+
+_ANALYSIS_GAUGE_KEYS = (
+    "runtime_jaxpr_audit_s", "runtime_cache_churn_s", "runtime_encoding_s",
+    "runtime_conflicts_s", "runtime_total_s",
+)
+
+
+def render_prometheus_analysis(metrics, *,
+                               prefix: str = "repro_analysis") -> str:
+    """Prometheus text exposition of a trace-tier run's
+    :class:`repro.analysis.trace.TraceVerifyMetrics` — per-family finding
+    counts as counters, verifier runtimes as gauges, so CI scrapes give
+    the static-analysis tier the same trend lines the service has.
+    """
+    out: list[str] = []
+    for key in _ANALYSIS_COUNTER_KEYS:
+        out.append(f"# TYPE {prefix}_{key} counter")
+        out.append(f"{prefix}_{key} {_prom_num(getattr(metrics, key))}")
+    for key in _ANALYSIS_GAUGE_KEYS:
+        out.append(f"# TYPE {prefix}_{key} gauge")
+        out.append(f"{prefix}_{key} {_prom_num(getattr(metrics, key))}")
+    return "\n".join(out) + "\n"

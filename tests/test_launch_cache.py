@@ -10,8 +10,10 @@ import numpy as np
 import pytest
 
 from repro import core
-from repro.core.launches import LaunchCache, launch_cache_bytes
-from repro.core.padding import LANE, next_pow2, pad_multiple, pad_pow2
+from repro.core.launches import (LaunchCache, default_reservation,
+                                 launch_cache_bytes)
+from repro.core.padding import (LANE, next_pow2, pad_bucket, pad_multiple,
+                                pad_pow2)
 from repro.engine import factor_bytes, in_memory_bytes, plan_for
 
 
@@ -35,6 +37,20 @@ def test_padding_helpers_shared():
     assert pad_pow2(5) == LANE and pad_pow2(300) == 512
     assert pad_multiple(1) == LANE and pad_multiple(257) == 512
     assert pad_multiple(512) == 512
+    # size-class buckets: LANE multiples, >= n, <= 25% waste above 1024,
+    # and boundedly many distinct values (the cache-churn invariant)
+    assert pad_bucket(1) == LANE and pad_bucket(256) == 256
+    assert pad_bucket(2048) == 2048 and pad_bucket(2049) == 2560
+    for n in (1, 255, 257, 1023, 5000, 1 << 20, (1 << 20) + 1):
+        b = pad_bucket(n)
+        assert b >= n and b % LANE == 0
+        if n > 1024:
+            assert b - n <= n // 4
+    assert len({pad_bucket(n) for n in range(1, 1 << 16)}) <= \
+        8 * 16 + 2                        # <= 8 classes per octave
+    # monotone: a bigger launch never gets a smaller reservation
+    vals = [pad_bucket(n) for n in range(1, 1 << 13)]
+    assert vals == sorted(vals)
 
 
 def test_single_dispatch_per_call_vs_per_launch_loop():
@@ -113,7 +129,7 @@ def test_cache_bytes_accounting():
     b = core.build_blco(t, target_bits=12, max_nnz_per_block=256)
     cache = LaunchCache.from_blco(b)
     max_launch = max(l.nnz for l in b.launches)
-    res = pad_multiple(max_launch)
+    res = default_reservation(max_launch)
     assert cache.reservation == res
     assert cache.num_launches == len(b.launches)
     per_elem = 4 + 4 + b.values.dtype.itemsize + 4 * b.order

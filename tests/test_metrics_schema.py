@@ -51,6 +51,15 @@ ENGINE_STATS_KEYS = {
 
 HIST_KEYS = {"count", "sum", "min", "max", "buckets"}
 
+ANALYSIS_KEYS = {
+    "hot_paths_traced", "jaxpr_eqns_walked", "encodings_verified",
+    "launches_analyzed",
+    "findings_total", "findings_jaxpr_audit", "findings_cache_churn",
+    "findings_encoding", "findings_conflicts",
+    "runtime_jaxpr_audit_s", "runtime_cache_churn_s", "runtime_encoding_s",
+    "runtime_conflicts_s", "runtime_total_s",
+}
+
 ENGINE_HIST_NAMES = {"dispatch_s", "put_chunk_s", "disk_read_s",
                      "launch_nnz"}
 SERVICE_HIST_NAMES = ENGINE_HIST_NAMES | {"queue_wait_s", "quantum_s"}
@@ -97,6 +106,32 @@ def test_snapshots_json_safe_with_data():
     # bucket keys are string-typed les, safe as JSON object keys
     assert all(isinstance(k, str)
                for k in back["hist"]["quantum_s"]["buckets"])
+
+
+def test_trace_verify_metrics_snapshot_keys_only_grow():
+    from repro.analysis.trace.metrics import TraceVerifyMetrics
+    snap = TraceVerifyMetrics().snapshot()
+    missing = ANALYSIS_KEYS - set(snap)
+    assert not missing, f"TraceVerifyMetrics.snapshot() lost keys: {missing}"
+    json.dumps(snap)
+
+
+def test_trace_verify_prometheus_render():
+    """Every analysis golden key appears as a repro_analysis_* sample."""
+    from repro.analysis.trace.metrics import TraceVerifyMetrics
+    from repro.obs.export import render_prometheus_analysis
+
+    class _F:                         # a Finding-shaped stub
+        pass_id = "trace-encoding"
+
+    m = TraceVerifyMetrics(hot_paths_traced=6, runtime_total_s=0.5)
+    m.count_findings([_F(), _F()])
+    text = render_prometheus_analysis(m)
+    for key in ANALYSIS_KEYS:
+        assert f"repro_analysis_{key} " in text
+    assert "repro_analysis_findings_total 2" in text
+    assert "repro_analysis_findings_encoding 2" in text
+    assert "repro_analysis_hot_paths_traced 6" in text
 
 
 def test_hist_snapshot_has_no_infinities():

@@ -28,7 +28,7 @@ import os
 import sys
 
 DEFAULT_BENCHES = ("BENCH_3.json", "BENCH_4.json", "BENCH_5.json",
-                   "BENCH_6.json")
+                   "BENCH_6.json", "BENCH_7.json")
 
 # payload keys that must agree for two runs to be timing-comparable
 CONFIG_KEYS = ("bench", "rank", "tensor", "block_budget_nnz", "queues",
@@ -62,11 +62,18 @@ def _flat_metrics(old: dict, new: dict):
                            ("store_write_s", "lower")):
         if key in old and key in new:
             out[key] = (old[key], new[key], direction)
-    for key in ("us_per_call",):                      # BENCH_5 tier timings
+    for key in ("us_per_call",):                      # BENCH_5/7 tier timings
         if isinstance(old.get(key), dict) and isinstance(new.get(key), dict):
             for tier in sorted(set(old[key]) & set(new[key])):
                 out[f"{key}.{tier}"] = (old[key][tier], new[key][tier],
                                         "lower")
+    # BENCH_7 bandwidth fractions: a drop in achieved fraction of the
+    # measured peak on any edge is a bandwidth regression ("higher" is
+    # better, so ratio = old/new)
+    key = "achieved_fraction"
+    if isinstance(old.get(key), dict) and isinstance(new.get(key), dict):
+        for edge in sorted(set(old[key]) & set(new[key])):
+            out[f"{key}.{edge}"] = (old[key][edge], new[key][edge], "higher")
     return out
 
 

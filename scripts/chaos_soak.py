@@ -30,7 +30,9 @@ import numpy as np
 
 from repro.core.tensor import SparseTensor
 from repro.faults import inject
+from repro.obs import ledger as obs_ledger
 from repro.obs import trace as obs_trace
+from repro.obs.slo import TelemetryExporter
 from repro.service import ServiceRuntime, SubmitDecomposition, GetTrace
 
 WORKLOAD = ((0, 1, "acme", 1.0), (1, 2, "umbrella", 2.0),
@@ -46,30 +48,46 @@ def _tensor(seed, nnz=500, dim=12):
         dims=(dim, dim, dim))
 
 
-def _run(store_dir, *, faults):
-    """One workload pass; returns (per-job outcome, metrics, trace)."""
+def _run(store_dir, *, faults, export_jsonl=None, export_prom=None):
+    """One workload pass; returns (outcome, metrics, trace, ok, exporter)."""
     ctx = inject.active(None) if not faults else _noop()
+    exp_counters = None
     with ctx:
         with ServiceRuntime(device_budget_bytes=256 << 20,
                             store_dir=store_dir,
                             host_budget_bytes=1) as rt:
-            ids = [rt.submit(SubmitDecomposition(
-                tensor=_tensor(ts), rank=RANK, iters=ITERS, tol=0.0,
-                seed=ss, tenant=tenant, weight=weight))
-                for ts, ss, tenant, weight in WORKLOAD]
-            ok = rt.drain(timeout=600)
-            out = {}
-            for n, jid in enumerate(ids):
-                st = rt.status(jid)
-                if st.state == "done":
-                    res = rt.result(jid).result
-                    out[n] = ("done", [float(f) for f in res.fits], None)
-                else:
-                    out[n] = (st.state, None, st.error_payload)
-            metrics = rt.service_metrics()
-            trace = rt.trace(GetTrace(drain=True))
-            dead = rt._error is not None
-    return out, metrics, trace, ok and not dead
+            exporter = None
+            if export_jsonl is not None:
+                # runs in its own daemon thread: worker crashes and
+                # watchdog restarts must not interrupt the export cadence
+                exporter = TelemetryExporter(rt, interval_s=0.2,
+                                             jsonl_path=export_jsonl,
+                                             prom_path=export_prom)
+                exporter.start()
+            try:
+                ids = [rt.submit(SubmitDecomposition(
+                    tensor=_tensor(ts), rank=RANK, iters=ITERS, tol=0.0,
+                    seed=ss, tenant=tenant, weight=weight))
+                    for ts, ss, tenant, weight in WORKLOAD]
+                ok = rt.drain(timeout=600)
+                out = {}
+                for n, jid in enumerate(ids):
+                    st = rt.status(jid)
+                    if st.state == "done":
+                        res = rt.result(jid).result
+                        out[n] = ("done", [float(f) for f in res.fits], None)
+                    else:
+                        out[n] = (st.state, None, st.error_payload)
+                metrics = rt.service_metrics()
+                trace = rt.trace(GetTrace(drain=True))
+                dead = rt._error is not None
+            finally:
+                if exporter is not None:
+                    alive_at_stop = exporter.running
+                    exporter.stop()
+                    exp_counters = dict(exporter.counters(),
+                                        alive_at_stop=alive_at_stop)
+    return out, metrics, trace, ok and not dead, exp_counters
 
 
 class _noop:
@@ -83,6 +101,10 @@ class _noop:
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--trace-out", default="chaos_trace.json")
+    ap.add_argument("--telemetry-out", default=None, metavar="JSONL",
+                    help="run the TelemetryExporter against the faulted "
+                         "runtime and write its JSONL feed here "
+                         "(default: a temp file, kept only on request)")
     args = ap.parse_args()
 
     plan = inject.FAULTS.plan
@@ -90,13 +112,23 @@ def main() -> int:
     obs_trace.enable()
 
     with tempfile.TemporaryDirectory() as ref_dir:
-        ref, ref_metrics, _, ref_ok = _run(ref_dir, faults=False)
+        ref, ref_metrics, _, ref_ok, _ = _run(ref_dir, faults=False)
     if not ref_ok or any(v[0] != "done" for v in ref.values()):
         print("FATAL: fault-free reference run failed", file=sys.stderr)
         return 2
 
-    with tempfile.TemporaryDirectory() as store_dir:
-        out, metrics, trace, alive = _run(store_dir, faults=True)
+    jsonl_path = args.telemetry_out or os.path.join(
+        tempfile.gettempdir(), f"chaos_telemetry_{os.getpid()}.jsonl")
+    obs_ledger.clear()
+    obs_ledger.enable()
+    try:
+        with tempfile.TemporaryDirectory() as store_dir:
+            out, metrics, trace, alive, exp = _run(
+                store_dir, faults=True, export_jsonl=jsonl_path,
+                export_prom=jsonl_path + ".prom")
+        ledger_snap = obs_ledger.snapshot()
+    finally:
+        obs_ledger.disable()
 
     with open(args.trace_out, "w") as f:
         json.dump(trace, f)
@@ -126,6 +158,48 @@ def main() -> int:
         violations.append(
             f"ledger leak: admitted_reservation_bytes = "
             f"{metrics['admitted_reservation_bytes']}")
+
+    # fault balance: under retries the transfer is re-attempted but both
+    # the EngineStats counter and the bandwidth ledger record once, after
+    # success; a giveup raises before either records.  Every job reaches a
+    # terminal state here, so the retired-job byte totals must equal the
+    # ledger's edge accounts exactly (integer byte counts — order-free).
+    edges = ledger_snap.get("edges", {})
+    for edge, stats_key in (("host_device", "h2d_bytes_total"),
+                            ("disk_host", "disk_bytes_total")):
+        lv = int(edges.get(edge, {}).get("bytes", 0))
+        sv = int(metrics[stats_key])
+        print(f"  ledger[{edge}].bytes = {lv}  ({stats_key} = {sv})")
+        if lv != sv:
+            violations.append(
+                f"bandwidth ledger imbalance on {edge}: ledger {lv} B "
+                f"!= {stats_key} {sv} B (double-count or drop under "
+                f"faults)")
+
+    # the exporter runs on its own thread: worker crashes + watchdog
+    # restarts must not stop the telemetry cadence
+    if exp is None:
+        violations.append("telemetry exporter never ran")
+    else:
+        print(f"  telemetry: {exp['exports']} exports, "
+              f"{exp['failures']} failures across "
+              f"{metrics['watchdog_restarts']} worker restart(s) "
+              f"-> {jsonl_path}")
+        if exp["exports"] < 1:
+            violations.append("telemetry exporter produced no exports")
+        if exp["failures"]:
+            violations.append(
+                f"telemetry exporter recorded {exp['failures']} "
+                f"failed export(s)")
+        if not exp["alive_at_stop"]:
+            violations.append("telemetry exporter thread died before "
+                              "shutdown (did not survive the soak)")
+    if not args.telemetry_out:
+        for p in (jsonl_path, jsonl_path + ".prom"):
+            try:
+                os.unlink(p)
+            except OSError:
+                pass
 
     if violations:
         print("CHAOS SOAK FAILED:", file=sys.stderr)

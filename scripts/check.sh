@@ -40,7 +40,8 @@ if python benchmarks/run.py --fast \
         --mt-json "$FRESH_DIR/BENCH_4.json" \
         --oom-json "$FRESH_DIR/BENCH_5.json" \
         --obs-json "$FRESH_DIR/BENCH_6.json" \
-        --trace-json "$FRESH_DIR/TRACE_6.json" > "$FRESH_DIR/bench.log" 2>&1
+        --trace-json "$FRESH_DIR/TRACE_6.json" \
+        --roofline-json "$FRESH_DIR/BENCH_7.json" > "$FRESH_DIR/bench.log" 2>&1
 then
     python scripts/bench_compare.py --fresh-dir "$FRESH_DIR" \
         || echo "bench_compare: regression reported (non-blocking in check.sh)"

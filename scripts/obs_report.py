@@ -1,0 +1,116 @@
+#!/usr/bin/env python
+"""Render the roofline attribution table from a BENCH_7 payload.
+
+Usage::
+
+    python scripts/obs_report.py [BENCH_7.json] [--json]
+
+Reads the committed (or CI-fresh) ``BENCH_7.json`` and prints a
+per-regime, per-edge table: bytes moved, seconds, achieved GB/s, the
+measured ceiling, achieved fraction, plus each regime's arithmetic
+intensity / bound classification and saturated edge.  ``--json`` emits
+the condensed machine-readable report instead (for artifact diffing).
+
+Exit codes: 0 on success, 2 when the payload is missing/unreadable.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+EDGE_ORDER = ("disk_host", "host_device", "device_hbm")
+
+
+def _fmt_bytes(n: float) -> str:
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(n) < 1000.0 or unit == "TB":
+            return f"{n:.1f}{unit}" if unit != "B" else f"{int(n)}B"
+        n /= 1000.0
+    return f"{n:.1f}TB"
+
+
+def condensed(payload: dict) -> dict:
+    """The machine-readable core of the report (stable keys)."""
+    return {
+        "tensor": payload.get("tensor"),
+        "fast_mode": payload.get("fast_mode"),
+        "peak_gb_per_s": payload.get("peak_gb_per_s", {}),
+        "achieved_fraction": payload.get("achieved_fraction", {}),
+        "saturated_edge": payload.get("saturated_edge", {}),
+        "bound": payload.get("bound", {}),
+        "max_edge_rel_err": payload.get("max_edge_rel_err"),
+        "obs_enabled_overhead_frac":
+            payload.get("obs_enabled_overhead_frac"),
+    }
+
+
+def render(payload: dict) -> str:
+    report = payload.get("roofline", {})
+    regimes = report.get("regimes", {})
+    peaks = payload.get("peak_gb_per_s", {})
+    lines = []
+    lines.append(f"Roofline attribution — {payload.get('tensor', '?')} "
+                 f"(rank {payload.get('rank', '?')}, "
+                 f"{payload.get('launches', '?')} launches, "
+                 f"backend {payload.get('backend', '?')})")
+    lines.append(f"peaks: " + "  ".join(
+        f"{e}={peaks.get(e, 0.0):.2f}GB/s" for e in EDGE_ORDER if e in peaks))
+    lines.append("")
+    hdr = (f"{'regime':<14} {'edge':<12} {'bytes':>10} {'seconds':>10} "
+           f"{'GB/s':>8} {'peak':>8} {'frac':>6}")
+    lines.append(hdr)
+    lines.append("-" * len(hdr))
+    for regime, rep in regimes.items():
+        for edge in EDGE_ORDER:
+            er = rep.get("edges", {}).get(edge)
+            if er is None or er.get("seconds", 0.0) <= 0.0:
+                continue
+            frac = er.get("achieved_fraction")
+            sat = " <- saturated" \
+                if payload.get("saturated_edge", {}).get(regime) == edge \
+                else ""
+            lines.append(
+                f"{regime:<14} {edge:<12} {_fmt_bytes(er['bytes']):>10} "
+                f"{er['seconds']:>10.4f} {er['gb_per_s']:>8.2f} "
+                f"{er.get('peak_gb_per_s', 0.0):>8.2f} "
+                f"{(f'{frac*100:.0f}%' if frac is not None else '-'):>6}"
+                f"{sat}")
+        lines.append(
+            f"{regime:<14} {'(classify)':<12} "
+            f"AI={rep.get('arithmetic_intensity', 0.0):.3f} flops/B -> "
+            f"{rep.get('bound', 'unknown')}")
+    lines.append("")
+    err = payload.get("max_edge_rel_err")
+    lines.append(f"ledger conservation: max_edge_rel_err={err!r} "
+                 f"({payload.get('conservation_checks', '?')} checks)")
+    ov = payload.get("obs_enabled_overhead_frac")
+    if ov is not None:
+        lines.append(f"tracing+ledger overhead (in-memory path): "
+                     f"{ov*100:+.2f}%")
+    return "\n".join(lines) + "\n"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("payload", nargs="?", default="BENCH_7.json",
+                    help="BENCH_7 payload path (default: BENCH_7.json)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the condensed machine-readable report")
+    args = ap.parse_args(argv)
+    try:
+        with open(args.payload, encoding="utf-8") as f:
+            payload = json.load(f)
+    except (OSError, json.JSONDecodeError) as exc:
+        print(f"obs_report: cannot read {args.payload}: {exc}",
+              file=sys.stderr)
+        return 2
+    if args.json:
+        print(json.dumps(condensed(payload), indent=2, sort_keys=True))
+    else:
+        sys.stdout.write(render(payload))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -40,6 +40,7 @@ import numpy as np
 
 from repro.faults import inject as faults
 from repro.faults.retry import retry_call
+from repro.obs import ledger as obs_ledger
 from repro.obs import trace as obs_trace
 from repro.obs.hist import EngineHists
 
@@ -243,6 +244,7 @@ def stream_mttkrp(chunks, blco: BLCOTensor, factors, mode: int, *,
     t_start = time.perf_counter()
     in_flight: list[tuple] = []
     t_first_dispatch: float | None = None
+    nnz_total = 0                     # true nnz launched, for the HBM model
 
     def _issue(chunk):
         t0 = time.perf_counter()
@@ -265,10 +267,16 @@ def stream_mttkrp(chunks, blco: BLCOTensor, factors, mode: int, *,
         stats.hist.launch_nnz.record(n)
         if obs_trace.TRACING.enabled:
             obs_trace.add_event("h2d.put", "h2d", t0, t1, bytes=nbytes, nnz=n)
+        if obs_ledger.LEDGER.enabled:
+            # same nbytes / t1 - t0 that fed the stats counters above:
+            # the ledger's host_device account conserves put_time_s /
+            # h2d_bytes exactly, by construction
+            obs_ledger.record(obs_ledger.HOST_DEVICE, nbytes, t1 - t0,
+                              regime=stats.backend)
         return dev, n
 
     def _consume(item):
-        nonlocal out, t_first_dispatch
+        nonlocal out, t_first_dispatch, nnz_total
         (hi, lo, vals, bases), n = item
         t0 = time.perf_counter()
         if t_first_dispatch is None:
@@ -292,6 +300,7 @@ def stream_mttkrp(chunks, blco: BLCOTensor, factors, mode: int, *,
         stats.dispatch_time_s += t1 - t0
         stats.hist.dispatch_s.record(t1 - t0)
         stats.launches += 1
+        nnz_total += int(n)
         if obs_trace.TRACING.enabled:
             obs_trace.add_event("dispatch.launch", "dispatch", t0, t1, nnz=n)
 
@@ -311,6 +320,19 @@ def stream_mttkrp(chunks, blco: BLCOTensor, factors, mode: int, *,
             obs_trace.add_event("device.fence", "device",
                                 t_first_dispatch, t_end,
                                 launches=stats.launches)
+        if obs_ledger.LEDGER.enabled:
+            # fenced seconds are measured (same window as device_time_s);
+            # HBM bytes are model-attributed over the true nnz launched
+            obs_ledger.record(
+                obs_ledger.DEVICE_HBM,
+                obs_ledger.hbm_model_bytes(
+                    nnz_total, order=b.order, rank=rank,
+                    value_itemsize=np.dtype(val_dtype).itemsize,
+                    factor_itemsize=np.dtype(factors[0].dtype).itemsize,
+                    kernel=kernel),
+                t_end - t_first_dispatch, regime=stats.backend,
+                flops=obs_ledger.mttkrp_flops(nnz_total, order=b.order,
+                                              rank=rank))
     stats.mttkrp_calls += 1
     stats.total_time_s += t_end - t_start
     return out

@@ -24,6 +24,7 @@ import numpy as np
 
 from repro.core import baselines
 from repro.core.blco import BLCOTensor, decode_coords
+from repro.obs import ledger as obs_ledger
 from repro.obs import trace as obs_trace
 from repro.core.mttkrp import DEFAULT_COPIES, DeviceBLCO, validate_kernel
 from repro.core.streaming import (EngineStats, LaunchChunks, ReservationSpec,
@@ -59,9 +60,19 @@ class InMemoryPlan:
         self._dev: DeviceBLCO | None = device if device is not None \
             else DeviceBLCO(blco, kernel=kernel, interpret=interpret)
         self._stats = EngineStats(backend=self.backend)
+        # kept for the analytic device-traffic model the ledger attributes
+        self._nnz = blco.nnz
+        self._order = blco.order
+        self._value_itemsize = np.dtype(blco.values.dtype).itemsize
         if device is None:
             # the one H2D transfer of this regime: the initial upload
             self._stats.h2d_bytes += self._dev.device_bytes()
+            if obs_ledger.LEDGER.enabled:
+                # seconds=0.0 mirrors the stats exactly: the upload adds
+                # bytes but no put_time_s in this regime
+                obs_ledger.record(obs_ledger.HOST_DEVICE,
+                                  self._dev.device_bytes(), 0.0,
+                                  regime=self.backend)
 
     def mttkrp(self, factors, mode: int, *, resolution: str | None = None,
                copies: int | None = None):
@@ -89,6 +100,21 @@ class InMemoryPlan:
             if obs_trace.TRACING.enabled:
                 obs_trace.add_event("device.fence", "device", t0, t2,
                                     backend=self.backend)
+            if obs_ledger.LEDGER.enabled:
+                # fenced seconds (same t2 - t0 window as device_time_s);
+                # HBM bytes attributed from the per-kernel model
+                rank = factors[0].shape[1]
+                obs_ledger.record(
+                    obs_ledger.DEVICE_HBM,
+                    obs_ledger.hbm_model_bytes(
+                        self._nnz, order=self._order, rank=rank,
+                        value_itemsize=self._value_itemsize,
+                        factor_itemsize=np.dtype(factors[0].dtype).itemsize,
+                        kernel=self.kernel),
+                    t2 - t0, regime=self.backend,
+                    flops=obs_ledger.mttkrp_flops(self._nnz,
+                                                  order=self._order,
+                                                  rank=rank))
         return out
 
     def device_bytes(self) -> int:
@@ -208,6 +234,9 @@ class ShardedPlan:
             if blco.nnz else None
         self._stats = EngineStats(backend=self.backend)
         self._stats.h2d_bytes += self._device_bytes
+        if obs_ledger.LEDGER.enabled:
+            obs_ledger.record(obs_ledger.HOST_DEVICE, self._device_bytes,
+                              0.0, regime=self.backend)
         self._closed = False
 
     def mttkrp(self, factors, mode: int):
@@ -260,6 +289,10 @@ class BaselinePlan:
         self._dev = device_fmt
         self._stats = EngineStats(backend=kind)
         self._stats.h2d_bytes += device_fmt.device_bytes()
+        if obs_ledger.LEDGER.enabled:
+            obs_ledger.record(obs_ledger.HOST_DEVICE,
+                              device_fmt.device_bytes(), 0.0,
+                              regime=self.backend)
 
     @classmethod
     def from_tensor(cls, t: SparseTensor, kind: str = "coo") -> "BaselinePlan":

@@ -1,14 +1,25 @@
-"""Observability: span tracing, log2 histograms, Perfetto/Prometheus export.
+"""Observability: spans, histograms, bandwidth ledger, roofline, SLOs.
 
 The cross-cutting layer every perf claim in this repo is measured
-through.  Three small modules, zero hard dependencies beyond the stdlib:
+through.  Six small modules, zero hard dependencies beyond the stdlib:
 
     trace    context-manager spans + already-measured events into a
              thread-safe bounded ring buffer; zero-cost when disabled
              (one module-level flag check, no allocation)
     hist     fixed log2-bucket histograms (dispatch latency, H2D chunk
              time, disk read time, queue wait, per-launch nnz) threaded
-             through ``EngineStats`` / ``JobMetrics`` / ``ServiceMetrics``
+             through ``EngineStats`` / ``JobMetrics`` / ``ServiceMetrics``;
+             scheduler latencies additionally keyed per tenant
+    ledger   memory-hierarchy bandwidth accounting: (bytes, seconds,
+             ops, flops) per tier edge (disk->host, host->device,
+             device HBM), per regime, and per (tenant, job); exact
+             conservation against ``EngineStats`` by construction
+    roofline achieved GB/s per edge + arithmetic intensity and
+             memory/compute-bound classification per regime, from the
+             ledger (``GetRoofline``, BENCH_7, ``scripts/obs_report.py``)
+    slo      per-tenant latency objectives + burn rates over the
+             scheduler hists, and the background ``TelemetryExporter``
+             (JSONL / Prometheus-textfile push at an interval)
     export   Chrome trace-event JSON (one track per pipeline stage —
              load it in Perfetto to *see* H2D/compute overlap) and
              Prometheus text exposition (``render_prometheus``)
@@ -17,21 +28,32 @@ Quick use::
 
     from repro import obs
     obs.enable()                       # or: with obs.trace.enabled(): ...
+    obs.ledger.enable()
     ... run a plan / service ...
     obs.write_chrome_trace("trace.json")
     print(obs.render_prometheus(service.metrics))
+    report = obs.roofline_report()     # achieved GB/s per tier edge
 """
-from . import trace
+from . import ledger, roofline, slo, trace
 from .export import (chrome_trace, render_prometheus, track_totals,
                      write_chrome_trace)
-from .hist import EngineHists, Hist, ServiceHists
+from .hist import EngineHists, Hist, ServiceHists, TenantHists
+from .ledger import (DEVICE_HBM, DISK_HOST, EDGES, HOST_DEVICE, LEDGER,
+                     hbm_model_bytes, job_scope, mttkrp_flops,
+                     verify_conservation)
+from .roofline import roofline_report
+from .slo import DEFAULT_SLOS, SLO, TelemetryExporter, slo_report
 from .trace import (TRACING, add_event, clear, disable, drain, enable,
                     is_enabled, span, spans)
 
 __all__ = [
     "trace", "TRACING", "span", "add_event", "enable", "disable",
     "is_enabled", "clear", "spans", "drain",
-    "Hist", "EngineHists", "ServiceHists",
+    "Hist", "EngineHists", "ServiceHists", "TenantHists",
     "chrome_trace", "write_chrome_trace", "track_totals",
     "render_prometheus",
+    "ledger", "LEDGER", "EDGES", "DISK_HOST", "HOST_DEVICE", "DEVICE_HBM",
+    "job_scope", "hbm_model_bytes", "mttkrp_flops", "verify_conservation",
+    "roofline", "roofline_report",
+    "slo", "SLO", "DEFAULT_SLOS", "slo_report", "TelemetryExporter",
 ]

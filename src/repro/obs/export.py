@@ -21,6 +21,7 @@ from __future__ import annotations
 import json
 import math
 
+from . import ledger as _ledger
 from . import trace as _trace
 
 # Stable track ordering for the Perfetto view: pipeline order, top-down.
@@ -117,13 +118,22 @@ def _prom_num(v) -> str:
     return repr(float(v)) if isinstance(v, float) else str(int(v))
 
 
+def _prom_hist_samples(name: str, hist, out: list,
+                       labels: str = "") -> None:
+    """Bucket/sum/count sample lines only (HELP/TYPE emitted by caller —
+    labelled series share one metadata block per metric name)."""
+    sep = f"{labels}," if labels else ""
+    for le, cum in hist.cumulative():
+        out.append(f'{name}_bucket{{{sep}le="{_prom_num(le)}"}} {cum}')
+    suffix = f"{{{labels}}}" if labels else ""
+    out.append(f"{name}_sum{suffix} {_prom_num(hist.sum)}")
+    out.append(f"{name}_count{suffix} {hist.count}")
+
+
 def _prom_hist(name: str, hist, help_text: str, out: list) -> None:
     out.append(f"# HELP {name} {help_text}")
     out.append(f"# TYPE {name} histogram")
-    for le, cum in hist.cumulative():
-        out.append(f'{name}_bucket{{le="{_prom_num(le)}"}} {cum}')
-    out.append(f"{name}_sum {_prom_num(hist.sum)}")
-    out.append(f"{name}_count {hist.count}")
+    _prom_hist_samples(name, hist, out)
 
 
 _COUNTER_KEYS = (
@@ -180,6 +190,50 @@ def render_prometheus(metrics, *, prefix: str = "repro") -> str:
                            ("disk_read_s", metrics.hist.disk_read_s),
                            ("launch_nnz", metrics.hist.launch_nnz)):
         _prom_hist(f"{prefix}_{name}", hist_obj, _HIST_HELP[name], out)
+    # per-tenant scheduler latency hists (bounded label cardinality; the
+    # unlabelled series above are the lossless rollup)
+    for name in ("queue_wait_s", "quantum_s"):
+        tenants = sorted(metrics.hist.tenant)
+        if not tenants:
+            continue
+        full = f"{prefix}_tenant_{name}"
+        out.append(f"# HELP {full} {_HIST_HELP[name]}, per tenant")
+        out.append(f"# TYPE {full} histogram")
+        for tenant in tenants:
+            _prom_hist_samples(full, getattr(metrics.hist.tenant[tenant],
+                                             name),
+                               out, labels=f'tenant="{tenant}"')
+    # tracer ring-buffer state: drops were previously visible only on the
+    # Python object; a scrape now sees buffer pressure and whether the
+    # tracer (and its overhead) is live at all
+    out.append(f"# TYPE {prefix}_trace_dropped_spans_total counter")
+    out.append(f"{prefix}_trace_dropped_spans_total "
+               f"{_trace.TRACING.dropped}")
+    out.append(f"# TYPE {prefix}_trace_enabled gauge")
+    out.append(f"{prefix}_trace_enabled "
+               f"{1 if _trace.TRACING.enabled else 0}")
+    out.append(f"# TYPE {prefix}_trace_buffered_spans gauge")
+    out.append(f"{prefix}_trace_buffered_spans {len(_trace.TRACING.buf)}")
+    out.append(f"# TYPE {prefix}_trace_capacity_spans gauge")
+    out.append(f"{prefix}_trace_capacity_spans "
+               f"{_trace.TRACING.buf.maxlen}")
+    # bandwidth-ledger state + per-edge totals (labelled by tier edge)
+    ledger_snap = _ledger.snapshot()
+    out.append(f"# TYPE {prefix}_ledger_enabled gauge")
+    out.append(f"{prefix}_ledger_enabled "
+               f"{1 if ledger_snap['enabled'] else 0}")
+    for metric, kind in (("bytes_total", "counter"),
+                         ("seconds_total", "counter"),
+                         ("ops_total", "counter"),
+                         ("gb_per_s", "gauge")):
+        field = metric.replace("_total", "")
+        out.append(f"# TYPE {prefix}_ledger_{metric} {kind}")
+        for edge in _ledger.EDGES:
+            acct = ledger_snap["edges"].get(edge)
+            if acct is None:
+                continue
+            out.append(f'{prefix}_ledger_{metric}{{edge="{edge}"}} '
+                       f'{_prom_num(acct[field])}')
     return "\n".join(out) + "\n"
 
 

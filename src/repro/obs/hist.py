@@ -167,16 +167,62 @@ class EngineHists:
                 for f in dataclasses.fields(self)}
 
 
+#: distinct tenant labels each scheduler histogram tracks before new
+#: tenants collapse into the overflow label — Prometheus label
+#: cardinality must stay bounded no matter how many tenants submit.
+MAX_TENANT_LABELS = 32
+OVERFLOW_LABEL = "other"
+
+
+@dataclasses.dataclass
+class TenantHists:
+    """One tenant's slice of the scheduler distributions."""
+    queue_wait_s: Hist = _hist_field()
+    quantum_s: Hist = _hist_field()
+
+    def snapshot(self) -> dict:
+        return {f.name: getattr(self, f.name).snapshot()
+                for f in dataclasses.fields(self)}
+
+
 @dataclasses.dataclass
 class ServiceHists:
     """Service-wide distributions: scheduler behaviour + rolled-up engine
-    hists of retired jobs (merged at retirement, lossless)."""
+    hists of retired jobs (merged at retirement, lossless).
+
+    ``queue_wait_s``/``quantum_s`` are additionally keyed per tenant via
+    :meth:`record_queue_wait`/:meth:`record_quantum`, which record the
+    same sample into the global hist and the tenant's — the global hist
+    IS the lossless rollup of the tenant slices, by construction, not by
+    a merge step that could drift.  Label cardinality is bounded at
+    :data:`MAX_TENANT_LABELS`; later tenants share ``"other"``.
+    """
     queue_wait_s: Hist = _hist_field()     # submission -> admission, per job
     quantum_s: Hist = _hist_field()        # one ALS sweep, per quantum
     dispatch_s: Hist = _hist_field()
     put_chunk_s: Hist = _hist_field()
     disk_read_s: Hist = _hist_field()
     launch_nnz: Hist = _hist_field()
+    tenant: dict = dataclasses.field(default_factory=dict)
+
+    def _tenant(self, tenant: str) -> TenantHists:
+        label = str(tenant)
+        th = self.tenant.get(label)
+        if th is None:
+            if len(self.tenant) >= MAX_TENANT_LABELS:
+                label = OVERFLOW_LABEL
+                th = self.tenant.get(label)
+            if th is None:
+                th = self.tenant.setdefault(label, TenantHists())
+        return th
+
+    def record_queue_wait(self, tenant: str, v: float) -> None:
+        self.queue_wait_s.record(v)
+        self._tenant(tenant).queue_wait_s.record(v)
+
+    def record_quantum(self, tenant: str, v: float) -> None:
+        self.quantum_s.record(v)
+        self._tenant(tenant).quantum_s.record(v)
 
     def merge_engine(self, eh: EngineHists) -> "ServiceHists":
         """Roll a retired job's per-plan distributions into the service."""
@@ -187,5 +233,10 @@ class ServiceHists:
         return self
 
     def snapshot(self) -> dict:
+        # the tenant dict is not a Hist; it snapshots separately (the
+        # schema test pins every value under "hist" to Hist shape)
         return {f.name: getattr(self, f.name).snapshot()
-                for f in dataclasses.fields(self)}
+                for f in dataclasses.fields(self) if f.name != "tenant"}
+
+    def tenant_snapshot(self) -> dict:
+        return {t: th.snapshot() for t, th in sorted(self.tenant.items())}

@@ -19,9 +19,9 @@ pooled reservations for large ones.
                and streaming per-iteration status feeds
 """
 from .api import (CancelJob, CancelResult, DecompositionResult,
-                  DecompositionService, GetMetrics, GetTrace, JobStatus,
-                  MTTKRPQuery, SetWeight, SubmitDecomposition, WeightUpdate,
-                  DEFAULT_DEVICE_BUDGET)
+                  DecompositionService, GetMetrics, GetRoofline, GetSLO,
+                  GetTrace, JobStatus, MTTKRPQuery, SetWeight,
+                  SubmitDecomposition, WeightUpdate, DEFAULT_DEVICE_BUDGET)
 from .executor import (PooledDiskStreamedPlan, PooledExecutor,
                        PooledInMemoryPlan, PooledStreamedPlan, ServiceEngine)
 from .metrics import JobMetrics, ServiceMetrics
@@ -32,7 +32,8 @@ from .scheduler import (Job, JobScheduler, QUEUED, RUNNING, DONE, FAILED,
 
 __all__ = [
     "CancelJob", "CancelResult", "DecompositionResult",
-    "DecompositionService", "GetMetrics", "GetTrace", "JobStatus",
+    "DecompositionService", "GetMetrics", "GetRoofline", "GetSLO",
+    "GetTrace", "JobStatus",
     "MTTKRPQuery", "SetWeight", "SubmitDecomposition", "WeightUpdate",
     "DEFAULT_DEVICE_BUDGET",
     "ServiceEngine", "PooledExecutor", "PooledInMemoryPlan",

@@ -15,6 +15,8 @@ from typing import Any
 
 from repro.core.cp_als import CPResult
 from repro.core.tensor import SparseTensor
+from repro.obs import roofline as obs_roofline
+from repro.obs import slo as obs_slo
 from repro.obs import trace as obs_trace
 from repro.obs.export import chrome_trace, render_prometheus
 
@@ -107,6 +109,34 @@ class GetTrace:
     successive calls stream disjoint windows of the timeline.
     """
     drain: bool = False
+
+
+@dataclasses.dataclass
+class GetRoofline:
+    """Request: the roofline attribution report over the bandwidth ledger.
+
+    ``peaks`` maps tier-edge name (``disk_host`` / ``host_device`` /
+    ``device_hbm``) to a measured peak GB/s; with ``peak_flops`` it turns
+    achieved GB/s into achieved fractions and classifies each regime
+    memory- vs compute-bound.  Without ceilings the report still carries
+    bytes / seconds / GB/s per edge (classification ``"unknown"``).  The
+    ledger must be enabled (``repro.obs.ledger.enable()``) for accounts
+    to accumulate.
+    """
+    peaks: dict | None = None
+    peak_flops: float | None = None
+
+
+@dataclasses.dataclass
+class GetSLO:
+    """Request: per-tenant latency-SLO evaluation + burn rates.
+
+    Evaluated over the scheduler's ``queue_wait_s``/``quantum_s``
+    histograms, globally and per tenant.  ``slos`` overrides the
+    objectives (a tuple of :class:`repro.obs.slo.SLO`); empty means
+    :data:`repro.obs.slo.DEFAULT_SLOS`.
+    """
+    slos: tuple = ()
 
 
 @dataclasses.dataclass
@@ -307,6 +337,22 @@ class DecompositionService:
             return self.metrics.snapshot()
         raise ValueError(f"unknown metrics format {req.format!r}; "
                          f"expected 'json' or 'prometheus'")
+
+    def get_roofline(self, req: GetRoofline | None = None) -> dict:
+        """Roofline attribution from the bandwidth ledger (``GetRoofline``):
+        achieved GB/s per tier edge, arithmetic intensity and bound
+        classification per regime, saturated edge per regime."""
+        req = req if req is not None else GetRoofline()
+        return obs_roofline.roofline_report(peaks=req.peaks,
+                                            peak_flops=req.peak_flops)
+
+    def get_slo(self, req: GetSLO | None = None) -> dict:
+        """Latency-SLO evaluation over the scheduler hists (``GetSLO``):
+        good fraction, met/violated, and burn rate — globally and per
+        tenant."""
+        req = req if req is not None else GetSLO()
+        slos = req.slos if req.slos else obs_slo.DEFAULT_SLOS
+        return obs_slo.slo_report(self.metrics.hist, slos=slos)
 
     def trace(self, req: GetTrace | None = None) -> dict:
         """Recorded spans as Chrome trace-event JSON (see ``GetTrace``).

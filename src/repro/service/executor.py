@@ -37,6 +37,7 @@ from repro.core.streaming import ReservationSpec
 from repro.faults import inject as faults
 from repro.engine.api import factor_bytes, in_memory_bytes
 from repro.engine.plans import InMemoryPlan, StreamedPlan
+from repro.obs import ledger as obs_ledger
 from repro.store import DiskStreamedPlan
 
 from .registry import TensorHandle
@@ -128,6 +129,10 @@ class PooledInMemoryPlan(InMemoryPlan):
         self._working = working_bytes       # per-job factor set, never pooled
         if held_bytes:                      # this plan paid for the upload
             self._stats.h2d_bytes += held_bytes
+            if obs_ledger.LEDGER.enabled:
+                # mirror of the stats line above: bytes, zero seconds
+                obs_ledger.record(obs_ledger.HOST_DEVICE, held_bytes, 0.0,
+                                  regime=self.backend)
 
     def device_bytes(self) -> int:
         return 0 if self._dev is None else self._held + self._working

@@ -191,4 +191,5 @@ class ServiceMetrics:
             "peak_admitted_reservation_bytes":
                 self.peak_admitted_reservation_bytes,
             "hist": self.hist.snapshot(),
+            "tenant_hist": self.hist.tenant_snapshot(),
         }

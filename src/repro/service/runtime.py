@@ -389,6 +389,20 @@ class ServiceRuntime:
         with self._lock:
             return self.service.get_metrics(req)
 
+    def get_roofline(self, req=None) -> dict:
+        """Roofline attribution from the bandwidth ledger (see GetRoofline).
+
+        Taken outside the runtime lock: the ledger synchronizes its own
+        accounts, and a mid-sweep report never blocks an in-flight
+        quantum (same reasoning as ``trace``).
+        """
+        return self.service.get_roofline(req)  # repro-lint: disable=lock-discipline
+
+    def get_slo(self, req=None) -> dict:
+        """Per-tenant SLO evaluation + burn rates (see GetSLO)."""
+        with self._lock:
+            return self.service.get_slo(req)
+
     def trace(self, req: GetTrace | None = None) -> dict:
         """Recorded spans as Chrome trace-event JSON (see GetTrace).
 

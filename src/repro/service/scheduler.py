@@ -45,6 +45,7 @@ from repro.analysis import sanitize as _san
 from repro.core.cp_als import CPState, cp_als_init, cp_als_step
 from repro.faults import inject as faults
 from repro.faults.retry import is_transient
+from repro.obs import ledger as obs_ledger
 from repro.obs import trace as obs_trace
 
 from .executor import ServiceEngine
@@ -247,8 +248,12 @@ class JobScheduler:
                 remaining = self.device_budget_bytes \
                     - self.metrics.admitted_reservation_bytes
                 try:
-                    plan = self.engine.try_plan(job.handle, rank=job.rank,
-                                                budget_remaining=remaining)
+                    # admission-time H2D uploads (resident-pool entry
+                    # creation) attribute to this tenant/job in the ledger
+                    with obs_ledger.job_scope(job.tenant, job.job_id):
+                        plan = self.engine.try_plan(
+                            job.handle, rank=job.rank,
+                            budget_remaining=remaining)
                 except Exception as exc:   # noqa: BLE001 — job isolation:
                     # planning failures are this job's problem, not the
                     # worker's; nothing was charged yet (try_plan's pool
@@ -270,8 +275,8 @@ class JobScheduler:
                     job.metrics.admitted_s = time.perf_counter()
                     job.metrics.backend = plan.backend
                     job.metrics.stats = plan.stats()
-                    self.metrics.hist.queue_wait_s.record(
-                        job.metrics.queue_wait_s)
+                    self.metrics.hist.record_queue_wait(
+                        job.tenant, job.metrics.queue_wait_s)
                     if job.cp is None:  # restored jobs carry their CPState
                         job.cp = cp_als_init(job.handle.dims, job.rank,
                                              norm_x=job.handle.norm_x,
@@ -433,7 +438,11 @@ class JobScheduler:
                     if faults.fire("factors.nan") is not None:
                         _poison_factors(job)
                     self.in_sweep = True     # factors mutate in place from
-                    cp_als_step(backend, job.cp)        # here to sweep end
+                    # ledger: every byte the sweep moves belongs to this
+                    # tenant/job (context-local, so concurrent workers in
+                    # other sessions cannot cross-attribute)
+                    with obs_ledger.job_scope(job.tenant, job.job_id):
+                        cp_als_step(backend, job.cp)    # here to sweep end
                     self.in_sweep = False
                     # always-on quantum-boundary NaN guard: the fit is a
                     # host float the sweep already synchronized on, so the
@@ -458,7 +467,7 @@ class JobScheduler:
                     return bool(self.active or self.pending)
             dt = time.perf_counter() - t0
             self.metrics.busy_time_s += dt
-            self.metrics.hist.quantum_s.record(dt)
+            self.metrics.hist.record_quantum(job.tenant, dt)
             self.trace.append(job.job_id)     # one bad tensor must not take
             job.metrics.iterations = job.cp.iteration  # down other tenants
             self.metrics.iterations_total += 1

@@ -44,6 +44,7 @@ import numpy as np
 from repro.core import linearize as lin
 from repro.faults import inject as faults
 from repro.faults.retry import retry_call
+from repro.obs import ledger as obs_ledger
 from repro.obs import trace as obs_trace
 from repro.core.blco import BLCOTensor, Block, Launch
 from repro.core.streaming import LaunchChunks, ReservationSpec, reservation_for
@@ -269,6 +270,12 @@ class DiskChunkSource:
             self.stats.disk_time_s += t1 - t0
             self.stats.disk_bytes += nbytes
             self.stats.hist.disk_read_s.record(t1 - t0)
+            if obs_ledger.LEDGER.enabled:
+                # same nbytes / t1 - t0 as the stats counters, and only
+                # when stats are carried — ledger and EngineStats stay in
+                # lockstep (exact conservation)
+                obs_ledger.record(obs_ledger.DISK_HOST, nbytes, t1 - t0,
+                                  regime=self.stats.backend)
         if obs_trace.TRACING.enabled:
             obs_trace.add_event("store.read", "store", t0, t1,
                                 launch=i, bytes=nbytes)

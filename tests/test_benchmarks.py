@@ -107,6 +107,48 @@ def test_committed_bench5_memory_hierarchy():
     assert payload["host_window_ratio_vs_all_launches"] < 0.5
 
 
+def test_bench_roofline_json_schema(tmp_path):
+    """The roofline bench measures peaks, attributes per-edge bandwidth
+    per regime, and conserves against EngineStats exactly."""
+    path = tmp_path / "BENCH_7.json"
+    store = tmp_path / "store"
+    store.mkdir()
+    rows = []
+    payload = bench.bench_roofline(rows, fast=True, json_path=str(path),
+                                   store_dir=str(store))
+    on_disk = json.loads(path.read_text())
+    assert on_disk == payload
+    assert payload["bench"] == "bandwidth_roofline"
+    for edge in ("disk_host", "host_device", "device_hbm"):
+        assert payload["peak_gb_per_s"][edge] > 0, edge
+    assert payload["max_edge_rel_err"] == 0.0       # the conservation law
+    for regime in ("in_memory", "streamed", "disk_streamed"):
+        assert payload["saturated_edge"][regime] in (
+            "disk_host", "host_device", "device_hbm"), regime
+        assert payload["bound"][regime] in (
+            "memory_bound", "compute_bound"), regime
+        assert payload["us_per_call"][regime] > 0, regime
+    assert payload["achieved_fraction"]             # non-empty, all > 0
+    assert all(v > 0 for v in payload["achieved_fraction"].values())
+    assert any(name.startswith("bench7.") for name, _, _ in rows)
+
+
+def test_committed_bench7_roofline():
+    """The committed roofline trajectory must conserve exactly, name a
+    saturated edge for the disk-streamed and host-streamed regimes, and
+    hold the tracing+ledger overhead bar on the in-memory path."""
+    path = os.path.join(REPO, "BENCH_7.json")
+    assert os.path.exists(path), "BENCH_7.json must be committed"
+    payload = json.loads(open(path).read())
+    assert payload["max_edge_rel_err"] == 0.0
+    for regime in ("disk_streamed", "streamed"):
+        assert payload["saturated_edge"][regime] in (
+            "disk_host", "host_device", "device_hbm"), regime
+        assert payload["achieved_fraction"][
+            f"{regime}.{payload['saturated_edge'][regime]}"] > 0
+    assert payload["obs_enabled_overhead_frac"] < 0.02
+
+
 def test_committed_bench4_weighted_shares():
     """The committed multi-tenant trajectory must hold the 10% share bound
     and show a real cancellation release."""

@@ -40,6 +40,7 @@ SERVICE_KEYS = {
     "hist",
     "store_rebuilds", "retries_total", "giveups_total", "demotions_total",
     "watchdog_restarts",
+    "tenant_hist",
 }
 
 ENGINE_STATS_KEYS = {
@@ -63,6 +64,20 @@ ANALYSIS_KEYS = {
 ENGINE_HIST_NAMES = {"dispatch_s", "put_chunk_s", "disk_read_s",
                      "launch_nnz"}
 SERVICE_HIST_NAMES = ENGINE_HIST_NAMES | {"queue_wait_s", "quantum_s"}
+
+TENANT_HIST_NAMES = {"queue_wait_s", "quantum_s"}
+
+#: Prometheus series the dashboards scrape from ``render_prometheus``:
+#: grow-only, same contract as the snapshot keys above.
+PROM_SERIES = {
+    "repro_trace_dropped_spans_total", "repro_trace_enabled",
+    "repro_trace_buffered_spans", "repro_trace_capacity_spans",
+    "repro_ledger_enabled", "repro_ledger_bytes_total",
+    "repro_ledger_seconds_total", "repro_ledger_ops_total",
+    "repro_ledger_gb_per_s",
+}
+
+LEDGER_EDGE_KEYS = {"bytes", "seconds", "ops", "flops", "gb_per_s"}
 
 
 def test_job_metrics_snapshot_keys_only_grow():
@@ -106,6 +121,58 @@ def test_snapshots_json_safe_with_data():
     # bucket keys are string-typed les, safe as JSON object keys
     assert all(isinstance(k, str)
                for k in back["hist"]["quantum_s"]["buckets"])
+
+
+def test_tenant_hist_snapshot_shape():
+    m = ServiceMetrics()
+    m.hist.record_queue_wait("acme", 0.01)
+    m.hist.record_quantum("acme", 0.5)
+    snap = m.snapshot()
+    assert set(snap["tenant_hist"]) == {"acme"}
+    per = snap["tenant_hist"]["acme"]
+    assert set(per) == TENANT_HIST_NAMES
+    for h in per.values():
+        assert set(h) >= HIST_KEYS
+    json.dumps(snap)
+
+
+def test_prometheus_series_only_grow():
+    """Every golden Prometheus series renders (trace + ledger state and
+    the labelled per-tenant histograms), with the ledger series labelled
+    per edge."""
+    from repro.obs import ledger
+    from repro.obs.export import render_prometheus
+    m = ServiceMetrics()
+    m.hist.record_queue_wait("acme", 0.01)
+    ledger.clear()
+    ledger.enable()
+    try:
+        ledger.record(ledger.HOST_DEVICE, 1024, 0.5, regime="streamed")
+        text = render_prometheus(m)
+    finally:
+        ledger.disable()
+        ledger.clear()
+    for series in PROM_SERIES:
+        assert f"\n{series}" in text or text.startswith(series), \
+            f"missing Prometheus series {series}"
+    assert 'repro_ledger_bytes_total{edge="host_device"} 1024' in text
+    assert 'repro_tenant_queue_wait_s_count{tenant="acme"} 1' in text
+
+
+def test_ledger_snapshot_edge_keys_only_grow():
+    from repro.obs import ledger
+    ledger.clear()
+    ledger.enable()
+    try:
+        ledger.record(ledger.DISK_HOST, 10, 0.1, regime="disk_streamed")
+        snap = ledger.snapshot()
+    finally:
+        ledger.disable()
+        ledger.clear()
+    acct = snap["edges"]["disk_host"]
+    missing = LEDGER_EDGE_KEYS - set(acct)
+    assert not missing, f"ledger edge account lost keys: {missing}"
+    json.dumps(snap)
 
 
 def test_trace_verify_metrics_snapshot_keys_only_grow():

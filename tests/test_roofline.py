@@ -1,0 +1,257 @@
+"""Roofline attribution, per-tenant SLO evaluation, the background
+telemetry exporter, and their service endpoints (GetRoofline/GetSLO)."""
+import json
+import math
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro import core, obs
+from repro.obs import ledger, roofline, slo
+from repro.obs.hist import Hist, ServiceHists, MAX_TENANT_LABELS, \
+    OVERFLOW_LABEL
+
+
+@pytest.fixture(autouse=True)
+def _clean_ledger():
+    ledger.disable()
+    ledger.clear()
+    yield
+    ledger.disable()
+    ledger.clear()
+
+
+# ---------------------------------------------------------------- roofline
+def test_arithmetic_intensity_and_classification():
+    assert roofline.arithmetic_intensity(100.0, 50.0) == 2.0
+    assert roofline.arithmetic_intensity(100.0, 0.0) == 0.0
+    # machine balance = peak_flops / peak_bytes_per_s; below it the
+    # kernel is starved for bytes, above it for flops
+    kw = {"peak_flops": 1e12, "peak_hbm_gb_per_s": 100.0}  # balance = 10
+    assert roofline.classify(1.0, **kw) == "memory_bound"
+    assert roofline.classify(100.0, **kw) == "compute_bound"
+    assert roofline.classify(1.0, peak_flops=None,
+                             peak_hbm_gb_per_s=None) == "unknown"
+
+
+def test_roofline_report_from_ledger():
+    ledger.enable()
+    ledger.record(ledger.HOST_DEVICE, 10 * 10**9, 10.0, regime="streamed")
+    ledger.record(ledger.DEVICE_HBM, 40 * 10**9, 10.0, regime="streamed",
+                  flops=4 * 10**9)
+    rep = obs.roofline_report(
+        peaks={"host_device": 10.0, "device_hbm": 8.0},
+        peak_flops=1e12)
+    reg = rep["regimes"]["streamed"]
+    hd = reg["edges"]["host_device"]
+    assert hd["gb_per_s"] == pytest.approx(1.0)
+    assert hd["achieved_fraction"] == pytest.approx(0.1)
+    hbm = reg["edges"]["device_hbm"]
+    assert hbm["achieved_fraction"] == pytest.approx(4.0 / 8.0)
+    assert reg["saturated_edge"] == "device_hbm"      # closest to its peak
+    assert reg["arithmetic_intensity"] == pytest.approx(0.1)
+    assert reg["bound"] == "memory_bound"
+    json.dumps(rep)
+
+
+def test_roofline_report_empty_ledger_is_json_safe():
+    rep = obs.roofline_report()
+    assert rep["regimes"] == {}
+    json.dumps(rep)
+
+
+# --------------------------------------------------------------------- SLO
+def _hist_with(values):
+    h = Hist()
+    for v in values:
+        h.record(v)
+    return h
+
+
+def test_fraction_le_is_conservative():
+    h = _hist_with([0.1] * 90 + [10.0] * 10)
+    # 0.1 lands in the bucket with le=0.125 <= 0.2: all 90 count as good
+    assert slo.fraction_le(h, 0.2) == pytest.approx(0.9)
+    # min above threshold: conservatively zero good
+    assert slo.fraction_le(h, 0.05) == 0.0
+    # max below threshold: everything is good, regardless of buckets
+    assert slo.fraction_le(_hist_with([0.5]), 100.0) == 1.0
+    # empty hist: vacuously met
+    assert slo.fraction_le(Hist(), 1.0) == 1.0
+
+
+def test_evaluate_and_burn_rate():
+    target = slo.SLO("wait", "queue_wait_s", threshold_s=0.2, target=0.95)
+    h = _hist_with([0.1] * 90 + [10.0] * 10)
+    v = slo.evaluate(target, h)
+    assert v["samples"] == 100
+    assert v["good_fraction"] == pytest.approx(0.9)
+    assert not v["met"]
+    # burning 10%/period against a 5% error budget = 2x burn
+    assert v["burn_rate"] == pytest.approx(0.1 / 0.05)
+    json.dumps(v)
+
+
+def test_slo_report_global_and_per_tenant():
+    hists = ServiceHists()
+    for _ in range(20):
+        hists.record_queue_wait("acme", 0.01)
+        hists.record_quantum("acme", 0.01)
+    for _ in range(20):
+        hists.record_queue_wait("umbrella", 30.0)
+        hists.record_quantum("umbrella", 30.0)
+    rep = slo.slo_report(hists)
+    assert set(rep["global"]) == {s.name for s in slo.DEFAULT_SLOS}
+    assert rep["tenants"]["acme"]["queue_wait_under_1s"]["met"]
+    assert not rep["tenants"]["umbrella"]["queue_wait_under_1s"]["met"]
+    json.dumps(rep)
+
+
+# ------------------------------------------------------------ tenant hists
+def test_tenant_hists_rollup_is_lossless():
+    hists = ServiceHists()
+    for n in range(5):
+        hists.record_queue_wait(f"t{n}", float(n + 1))
+    snap = hists.tenant_snapshot()
+    assert set(snap) == {f"t{n}" for n in range(5)}
+    # the global hist is the exact rollup: same count, same sum
+    assert hists.queue_wait_s.count == 5
+    assert hists.queue_wait_s.sum == pytest.approx(sum(range(1, 6)))
+    per_tenant = sum(s["queue_wait_s"]["count"] for s in snap.values())
+    assert per_tenant == hists.queue_wait_s.count
+
+
+def test_tenant_hists_cardinality_bounded():
+    hists = ServiceHists()
+    for n in range(MAX_TENANT_LABELS + 10):
+        hists.record_quantum(f"tenant-{n:03d}", 0.5)
+    snap = hists.tenant_snapshot()
+    assert len(snap) == MAX_TENANT_LABELS + 1
+    assert snap[OVERFLOW_LABEL]["quantum_s"]["count"] == 10
+    # rollup stays lossless through the overflow bucket
+    total = sum(s["quantum_s"]["count"] for s in snap.values())
+    assert total == hists.quantum_s.count == MAX_TENANT_LABELS + 10
+
+
+# ---------------------------------------------------------------- exporter
+class _Target:
+    """Minimal exporter target: metrics + SLO surface of the runtime."""
+
+    def __init__(self):
+        from repro.service.metrics import ServiceMetrics
+        self.metrics = ServiceMetrics()
+        self.metrics.jobs_completed = 1
+        self.metrics.hist.record_queue_wait("acme", 0.01)
+
+    def service_metrics(self):
+        return self.metrics.snapshot()
+
+    def get_slo(self, req=None):
+        return slo.slo_report(self.metrics.hist)
+
+
+def test_exporter_writes_jsonl_and_prom(tmp_path):
+    jsonl = str(tmp_path / "telemetry.jsonl")
+    prom = str(tmp_path / "telemetry.prom")
+    target = _Target()
+    exp = slo.TelemetryExporter(target, interval_s=0.05,
+                                jsonl_path=jsonl, prom_path=prom)
+    with exp:
+        deadline = time.time() + 5.0
+        while exp.counters()["exports"] < 2 and time.time() < deadline:
+            time.sleep(0.02)
+    counters = exp.counters()
+    assert counters["exports"] >= 2 and counters["failures"] == 0
+    assert not exp.running
+    with open(jsonl) as f:
+        records = [json.loads(line) for line in f]
+    assert len(records) == counters["exports"]
+    for rec in records:
+        assert rec["metrics"]["jobs_completed"] == 1
+        assert "slo" in rec and "ledger" in rec and "ts" in rec
+    # the prom textfile is a complete, atomic snapshot
+    text = open(prom).read()
+    assert "repro_ledger_enabled" in text
+    assert text.endswith("\n")
+
+
+def test_exporter_counts_failures_and_survives(tmp_path):
+    class _Broken(_Target):
+        def service_metrics(self):
+            raise RuntimeError("boom")
+
+    exp = slo.TelemetryExporter(_Broken(), interval_s=0.05,
+                                jsonl_path=str(tmp_path / "t.jsonl"))
+    exp.start()
+    deadline = time.time() + 5.0
+    while exp.counters()["failures"] < 2 and time.time() < deadline:
+        time.sleep(0.02)
+    assert exp.running                     # a failed export never kills it
+    exp.stop()
+    assert exp.counters()["failures"] >= 2
+    assert exp.counters()["exports"] == 0
+
+
+def test_exporter_disabled_paths_are_noops():
+    target = _Target()
+    exp = slo.TelemetryExporter(target, interval_s=60.0)  # no sinks
+    exp.start()
+    assert exp.export_once()               # still builds the record
+    exp.stop(final_export=False)
+    assert not exp.running
+
+
+# --------------------------------------------------------- service surface
+def test_service_roofline_and_slo_endpoints():
+    from repro.service import (GetRoofline, GetSLO, ServiceRuntime,
+                               SubmitDecomposition)
+    t = core.random_tensor((20, 15, 10), 600, seed=3)
+    ledger.enable()
+    with ServiceRuntime(device_budget_bytes=256 << 20) as rt:
+        job = rt.submit(SubmitDecomposition(tensor=t, rank=3, iters=2,
+                                            tol=0.0, tenant="acme"))
+        rt.wait(job, timeout=300)
+        roof = rt.get_roofline(GetRoofline(
+            peaks={"host_device": 100.0, "device_hbm": 100.0},
+            peak_flops=1e12))
+        slo_rep = rt.get_slo(GetSLO())
+        m = rt.get_metrics()
+    json.dumps(roof)
+    json.dumps(slo_rep)
+    # the submitted job's transfers landed in the ledger under its tenant
+    snap = ledger.snapshot()
+    assert "acme" in snap["tenants"]
+    assert snap["edges"]["host_device"]["bytes"] > 0
+    assert "in_memory" in roof["regimes"]
+    assert roof["regimes"]["in_memory"]["bound"] in (
+        "memory_bound", "compute_bound")
+    # per-tenant SLO + tenant_hist metrics surface
+    assert "acme" in slo_rep["tenants"]
+    assert all(s["met"] in (True, False)
+               for s in slo_rep["global"].values())
+    assert m["tenant_hist"]["acme"]["quantum_s"]["count"] >= 1
+
+
+def test_prometheus_exposition_tenant_trace_ledger_series():
+    from repro.service import (GetMetrics, ServiceRuntime,
+                               SubmitDecomposition)
+    t = core.random_tensor((16, 12, 10), 400, seed=4)
+    ledger.enable()
+    obs.enable()
+    try:
+        with ServiceRuntime(device_budget_bytes=256 << 20) as rt:
+            job = rt.submit(SubmitDecomposition(tensor=t, rank=3, iters=1,
+                                                tol=0.0, tenant="acme"))
+            rt.wait(job, timeout=300)
+            prom = rt.get_metrics(GetMetrics(format="prometheus"))
+    finally:
+        obs.disable()
+    assert 'repro_tenant_queue_wait_s_count{tenant="acme"}' in prom
+    assert 'repro_tenant_quantum_s_bucket{tenant="acme"' in prom
+    assert "repro_trace_dropped_spans_total" in prom
+    assert "repro_trace_enabled 1" in prom
+    assert "repro_ledger_enabled 1" in prom
+    assert 'repro_ledger_bytes_total{edge="host_device"}' in prom
+    assert 'repro_ledger_gb_per_s{edge="host_device"}' in prom
